@@ -1,0 +1,34 @@
+"""Fig. 11: HLS-tool invocations — exhaustive vs COSMOS, per component."""
+
+from __future__ import annotations
+
+import time
+
+from repro.apps.wami import wami_cosmos, wami_exhaustive
+
+
+def run(report) -> None:
+    t0 = time.time()
+    cos = wami_cosmos(delta=0.25)
+    exh = wami_exhaustive()
+    wall = time.time() - t0
+
+    lines = ["# Fig. 11 — invocations to the HLS tool",
+             "component,exhaustive,cosmos,reduction"]
+    reductions = []
+    for name in exh.invocations:
+        e = exh.invocations[name]
+        c = cos.invocations.get(name, 0)
+        r = e / max(1, c)
+        reductions.append(r)
+        lines.append(f"{name},{e},{c},{r:.1f}x")
+    total_r = exh.total_invocations / cos.total_invocations
+    lines.append(f"TOTAL,{exh.total_invocations},{cos.total_invocations},"
+                 f"{total_r:.1f}x")
+    lines.append(f"# paper: 6.7x average, up to 14.6x per component")
+    lines.append(f"# ours: {total_r:.1f}x average, up to {max(reductions):.1f}x")
+    lines.append(f"# exhaustive composition would need "
+                 f"{exh.combinations():.2e} combinations (paper: >9e12)")
+    report.write("fig11_invocations", lines)
+    report.csv("fig11_invocations", wall * 1e6,
+               f"avg={total_r:.1f}x_max={max(reductions):.1f}x")

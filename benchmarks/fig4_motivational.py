@@ -1,0 +1,59 @@
+"""Fig. 4: the (ports x unrolls) design space of the Gradient component.
+
+Reproduces the paper's motivational example: sweeping the PLM port count
+moves both latency and area by integer factors; unrolling moves latency
+within a port region with diminishing returns; the with-memory span
+dwarfs the dual-port-only span.  Also prices the same knob pair on the
+TPU side via the wami_gradient Pallas kernel's VMEM/grid model
+(DESIGN.md §2's "ports -> banks -> VMEM tiles" analogy).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.apps.wami import build_components
+from repro.core import CountingTool, HLSTool, span
+from repro.kernels.wami_gradient import grid_steps, vmem_bytes
+
+
+def run(report) -> None:
+    comps = build_components()
+    tool = CountingTool(HLSTool({"gradient": comps["gradient"].spec()}))
+
+    t0 = time.time()
+    rows: List[Dict] = []
+    for ports in (1, 2, 4, 8, 16):
+        for unrolls in range(max(1, ports), 33):
+            s = tool.synthesize("gradient", unrolls=unrolls, ports=ports)
+            if s.feasible:
+                rows.append({"ports": ports, "unrolls": unrolls,
+                             "lam_ms": s.lam * 1e3, "area_mm2": s.area})
+    wall = time.time() - t0
+
+    all_lam = [r["lam_ms"] for r in rows]
+    all_area = [r["area_mm2"] for r in rows]
+    dual = [r for r in rows if r["ports"] == 2]
+    lam_span, area_span = span(all_lam), span(all_area)
+    lam_dual = span([r["lam_ms"] for r in dual])
+    area_dual = span([r["area_mm2"] for r in dual])
+
+    lines = [f"# Fig. 4 — Gradient design space ({len(rows)} syntheses)",
+             "ports,unrolls,lam_ms,area_mm2"]
+    lines += [f"{r['ports']},{r['unrolls']},{r['lam_ms']:.4f},"
+              f"{r['area_mm2']:.4f}" for r in rows]
+    lines.append(f"# span with memory co-design: lambda {lam_span:.2f}x, "
+                 f"area {area_span:.2f}x (paper: 7.9x / 3.7x)")
+    lines.append(f"# span dual-port only:        lambda {lam_dual:.2f}x, "
+                 f"area {area_dual:.2f}x (paper: 1.4x / 1.2x)")
+    lines.append("# TPU analogue (wami_gradient kernel, 512x512 frame):")
+    lines.append("# ports,unrolls,vmem_bytes_per_step,grid_steps")
+    for ports in (1, 2, 4, 8):
+        for unrolls in (8, 32):
+            lines.append(f"# {ports},{unrolls},"
+                         f"{vmem_bytes(512, 512, ports=ports, unrolls=unrolls)},"
+                         f"{grid_steps(512, 512, ports=ports, unrolls=unrolls)}")
+    report.write("fig4_motivational", lines)
+    report.csv("fig4_gradient_space", wall * 1e6 / max(1, len(rows)),
+               f"lam_span={lam_span:.2f}x_vs_dual={lam_dual:.2f}x")

@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks (CPU XLA-reference wall time + model GFLOP/s).
+
+NOTE: wall times here are CPU-backend reference-path timings — the TPU
+kernels are validated in interpret mode and their performance is assessed
+structurally (BlockSpec working sets vs VMEM, MXU-shaped matmuls) in
+EXPERIMENTS.md §Roofline; CPU microseconds are reported only to catch
+regressions in the XLA fallback paths.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import mha
+from repro.kernels.ssd_scan import ssd
+from repro.kernels.wami_gradient import gradient
+
+
+def _time(fn, *args, reps=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(report) -> None:
+    key = jax.random.PRNGKey(0)
+    lines = ["# kernel micro-benches (CPU XLA reference path)",
+             "kernel,config,us_per_call,gflops_model"]
+
+    B, S, H, K, d = 1, 1024, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, K, d))
+    v = jax.random.normal(ks[2], (B, S, K, d))
+    us = _time(mha, q, k, v, use_pallas=False)
+    fl = 4 * B * H * S * S * d / 2          # causal
+    lines.append(f"flash_attention,B{B}xS{S}xH{H}d{d},{us:.0f},"
+                 f"{fl / us / 1e3:.1f}")
+    report.csv("flash_attention_ref", us, f"{fl / us / 1e3:.1f}GFLOPs")
+
+    Bz, S2, H2, P, N = 1, 2048, 8, 64, 64
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bz, S2, H2, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S2, H2)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H2,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (Bz, S2, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (Bz, S2, N)) * 0.3
+    us = _time(lambda *a: ssd(*a, use_pallas=False), x, dt, A, Bm, Cm)
+    fl = Bz * S2 * H2 * P * N * 6
+    lines.append(f"ssd_scan,B{Bz}xS{S2}xH{H2}P{P}N{N},{us:.0f},"
+                 f"{fl / us / 1e3:.1f}")
+    report.csv("ssd_scan_ref", us, f"{fl / us / 1e3:.1f}GFLOPs")
+
+    img = jax.random.normal(key, (512, 512))
+    us = _time(lambda im: gradient(im, use_pallas=False), img)
+    lines.append(f"wami_gradient,512x512,{us:.0f},"
+                 f"{512 * 512 * 4 / us / 1e3:.1f}")
+    report.csv("wami_gradient_ref", us, "stencil")
+    report.write("kernels_micro", lines)

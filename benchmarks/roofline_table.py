@@ -1,0 +1,72 @@
+"""The 40-cell roofline table, derived from the dry-run artifacts.
+
+compute  = HLO_FLOPs / (chips x 197 TF/s)
+memory   = HLO_bytes / (chips x 819 GB/s)
+collective = modeled collective bytes / (chips x 50 GB/s link)
+MODEL_FLOPS = 6ND (dense) / 6 N_active D (MoE) for train;
+              2ND per generated token for decode/prefill.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from repro.configs import get_config, get_shape
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch        # one token per sequence
+
+
+def run(report) -> None:
+    t0 = time.time()
+    lines = ["# Roofline table (per device; v5e: 197TF bf16, 819GB/s HBM, "
+             "50GB/s link)",
+             "arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+             "bound,model_flops_ratio,hbm_gb,fits_16g"]
+    n_cells = 0
+    worst = ("", 0.0)
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        if "__tuned" in f or "naive" in f:
+            continue
+        r = json.load(open(f))
+        if r["status"] == "skip":
+            lines.append(f"{r['arch']},{r['shape']},{r['mesh']},SKIP,,,"
+                         f"{r['skip_reason'][:60]},,,")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']},{r['shape']},{r['mesh']},ERROR,,,,,,")
+            continue
+        n_cells += 1
+        ro = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_total = r["cost"]["flops_per_device"] * r["devices"]
+        ratio = mf / hlo_total if hlo_total else 0.0
+        mem = r["memory"]
+        hbm = (mem["argument_bytes"] + mem["temp_bytes"]
+               + mem["output_bytes"]) / 1e9
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{ro['t_compute_s'] * 1e3:.2f},{ro['t_memory_s'] * 1e3:.2f},"
+            f"{ro['t_collective_s'] * 1e3:.2f},{ro['bound']},"
+            f"{ratio:.2f},{hbm:.1f},{'Y' if hbm <= 16 else 'N'}")
+        frac = min(ro["t_compute_s"], ro["t_memory_s"]) / max(
+            ro["t_bound_s"], 1e-12)
+        if ro["t_bound_s"] > worst[1]:
+            worst = (f"{r['arch']}/{r['shape']}/{r['mesh']}", ro["t_bound_s"])
+    report.write("roofline_table", lines)
+    report.csv("roofline_table", (time.time() - t0) * 1e6,
+               f"cells={n_cells}_slowest={worst[0]}")

@@ -1,0 +1,72 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig10]
+
+Detailed tables land in artifacts/bench/<name>.csv; the stdout CSV is the
+summary line per bench (name, us_per_call, derived metric).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+class Report:
+    def __init__(self):
+        os.makedirs(OUT_DIR, exist_ok=True)
+        self.rows = []
+
+    def write(self, name: str, lines):
+        with open(os.path.join(OUT_DIR, f"{name}.csv"), "w") as f:
+            f.write("\n".join(lines) + "\n")
+
+    def csv(self, name: str, us_per_call: float, derived: str):
+        row = f"{name},{us_per_call:.1f},{derived}"
+        self.rows.append(row)
+        print(row, flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (autoshard_llm, fig4_motivational, fig10_pareto,
+                   fig11_invocations, fleet_dse, kernels_micro,
+                   roofline_table, table1_characterization)
+    benches = {
+        "fig4": fig4_motivational,
+        "table1": table1_characterization,
+        "fig10": fig10_pareto,
+        "fig11": fig11_invocations,
+        "roofline": roofline_table,
+        "kernels": kernels_micro,
+        "autoshard": autoshard_llm,
+        "fleet": fleet_dse,
+    }
+    report = Report()
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, mod in benches.items():
+        if args.only and key != args.only:
+            continue
+        try:
+            mod.run(report)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{key},ERROR,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

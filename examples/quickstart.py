@@ -1,0 +1,44 @@
+"""Quickstart: build a zoo model, train a few steps, generate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.optim import AdamWConfig, init_opt
+from repro.serve import generate
+from repro.train import TrainStepConfig, make_train_step
+
+
+def main():
+    print("available archs:", ", ".join(list_archs()))
+    cfg = get_config("gemma2-9b").reduced()     # same family, CPU-sized
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3),
+                                   TrainStepConfig(remat="none",
+                                                   total_steps=30)))
+    opt = init_opt(params)
+    src = SyntheticLM(vocab=cfg.vocab, seed=0)
+    for i in range(30):
+        b = src.batch(step=i, shard=0, n_shards=1, batch=8, seq=64)
+        params, opt, m = step(params, opt,
+                              {k: jnp.asarray(v) for k, v in b.items()})
+        if i % 10 == 0:
+            print(f"step {i:3d} loss {float(m['loss']):.4f}")
+
+    prompt = jnp.asarray(b["tokens"][:2, :16])
+    out = generate(model, params, {"tokens": prompt}, max_new=12)
+    print("generated:", out.tolist()[0])
+
+
+if __name__ == "__main__":
+    main()

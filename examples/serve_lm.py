@@ -1,0 +1,19 @@
+"""Batched serving example: requests through the slot-based engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import run
+
+
+def main():
+    # hybrid arch through the same engine (API-uniform serving)
+    run("zamba2-2.7b-smoke", requests=12, slots=4, prompt_len=24, max_new=12)
+    run("qwen2-0.5b-smoke", requests=16, slots=8, prompt_len=32, max_new=16)
+
+
+if __name__ == "__main__":
+    main()

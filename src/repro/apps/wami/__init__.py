@@ -1,0 +1,20 @@
+"""WAMI (wide-area motion imagery) accelerator — the paper's case study."""
+
+from .components import (FRAME, N_LK, TILE, WamiComponent, build_components,
+                         change_detection, debayer, gradient, grayscale,
+                         hessian, matrix_add, matrix_invert, matrix_mul,
+                         matrix_reshape, matrix_sub, sd_update,
+                         steepest_descent, warp_affine)
+from .pipeline import (MATRIX_INV_LATENCY_S, lucas_kanade, wami_app,
+                       wami_cosmos, wami_exhaustive, wami_hls_tool,
+                       wami_knob_spaces, wami_tmg)
+
+__all__ = [
+    "FRAME", "TILE", "N_LK", "WamiComponent", "build_components",
+    "debayer", "grayscale", "gradient", "steepest_descent", "hessian",
+    "sd_update", "matrix_add", "matrix_sub", "matrix_mul", "matrix_reshape",
+    "matrix_invert", "warp_affine", "change_detection",
+    "lucas_kanade", "wami_app", "wami_tmg", "wami_hls_tool",
+    "wami_knob_spaces", "wami_cosmos", "wami_exhaustive",
+    "MATRIX_INV_LATENCY_S",
+]

@@ -1,0 +1,145 @@
+"""CDFG extraction from jaxprs.
+
+The paper infers the lambda-constraint inputs (gamma_r, gamma_w, eta) "by
+traversing the control data flow graph (CDFG) created by the HLS tool for
+scheduling the lower-right point" (Section 5).  Our components are JAX
+functions, so the CDFG *is* the jaxpr: each WAMI component exposes its
+per-iteration scalar body (``kernel``), and this module traverses
+``jax.make_jaxpr(kernel)`` to count
+
+  * gamma_r — the maximum number of reads of the same PLM array per loop
+    iteration = the largest per-iteration window among the kernel inputs;
+  * gamma_w — writes per iteration = total output elements;
+  * arith_ops / dep_depth — arithmetic operation count and critical
+    dependence-chain depth of the dataflow graph (the scheduler inputs).
+
+This keeps the characterization honest: the same dataflow graph that
+executes (and is golden-tested) drives the synthesis model.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ...core.hlsim import LoopNest
+
+__all__ = ["KernelFacts", "analyze_kernel", "loop_nest_from_kernel"]
+
+# Primitives that occupy a functional unit for one state.  Everything
+# else (reshapes, converts, broadcasts) is wiring.
+_ARITH = {
+    "add", "sub", "mul", "div", "rem", "neg", "abs", "sign",
+    "max", "min", "pow", "integer_pow", "exp", "log", "sqrt", "rsqrt",
+    "tanh", "logistic", "floor", "ceil", "round", "erf",
+    "lt", "le", "gt", "ge", "eq", "ne", "select_n", "clamp",
+    "and", "or", "xor", "not", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "nextafter", "atan2", "square",
+}
+_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+           "reduce_and", "reduce_or", "argmax", "argmin"}
+_FREE = {"reshape", "broadcast_in_dim", "convert_element_type", "squeeze",
+         "transpose", "slice", "concatenate", "rev", "copy", "stop_gradient",
+         "split", "pjit", "custom_jvp_call", "custom_vjp_call"}
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 1
+
+
+@dataclass(frozen=True)
+class KernelFacts:
+    reads_per_input: Tuple[int, ...]   # window elements read per iteration
+    writes: int                        # output elements per iteration
+    arith_ops: int
+    dep_depth: int
+    live_values: int
+
+
+def _walk(jaxpr, depth_in) -> Tuple[int, int, int]:
+    """Return (arith_ops, dep_depth, n_intermediate) of a (possibly
+    nested) jaxpr whose invars start at the given depths."""
+    depth = dict(depth_in)
+    arith = 0
+    max_depth = max(depth.values(), default=0)
+    n_vars = 0
+
+    def var_depth(v) -> int:
+        if hasattr(v, "val"):      # Literal
+            return 0
+        return depth.get(v, 0)
+
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        d_in = max((var_depth(v) for v in eqn.invars), default=0)
+        width = max((_size(ov.aval) for ov in eqn.outvars), default=1)
+
+        if name in _FREE:
+            cost, d = 0, d_in
+        elif name in _ARITH:
+            cost, d = width, d_in + 1
+        elif name in _REDUCE:
+            n = max((_size(v.aval) for v in eqn.invars if not hasattr(v, "val")),
+                    default=1)
+            cost = max(1, n - 1)
+            d = d_in + max(1, math.ceil(math.log2(max(2, n))))  # tree reduce
+        elif name == "dot_general":
+            shapes = [v.aval.shape for v in eqn.invars if not hasattr(v, "val")]
+            k = shapes[0][-1] if shapes and shapes[0] else 1
+            cost = 2 * width * max(1, k)
+            d = d_in + 1 + math.ceil(math.log2(max(2, k)))
+        elif name in ("scan", "while", "cond", "closed_call", "core_call"):
+            # nested control flow: recurse into the first branch/body
+            sub = eqn.params.get("jaxpr", None) or eqn.params.get("branches", [None])[0]
+            if sub is not None:
+                inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                sub_depth = {v: d_in for v in inner.invars}
+                a2, d2, n2 = _walk(inner, sub_depth)
+                trips = int(eqn.params.get("length", 1) or 1)
+                cost, d = a2 * trips, d_in + d2 * trips
+                n_vars += n2
+            else:
+                cost, d = width, d_in + 1
+        else:
+            cost, d = width, d_in + 1
+
+        arith += cost
+        for ov in eqn.outvars:
+            depth[ov] = d
+            n_vars += 1
+        max_depth = max(max_depth, d)
+    return arith, max_depth, n_vars
+
+
+def analyze_kernel(kernel: Callable, example_args: Sequence) -> KernelFacts:
+    """Traverse the kernel's jaxpr and extract scheduling facts."""
+    closed = jax.make_jaxpr(kernel)(*example_args)
+    jaxpr = closed.jaxpr
+    reads = tuple(_size(v.aval) for v in jaxpr.invars)
+    writes = sum(_size(v.aval) for v in jaxpr.outvars)
+    depth0 = {v: 0 for v in jaxpr.invars}
+    arith, dep_depth, n_vars = _walk(jaxpr, depth0)
+    live = max(4, min(n_vars, sum(reads) + writes + 4))
+    return KernelFacts(reads_per_input=reads, writes=writes,
+                       arith_ops=max(1, arith), dep_depth=max(1, dep_depth),
+                       live_values=live)
+
+
+def loop_nest_from_kernel(kernel: Callable, example_args: Sequence, *,
+                          trip: int, has_plm_access: bool = True) -> LoopNest:
+    """Build the hlsim LoopNest for a component from its scalar body."""
+    f = analyze_kernel(kernel, example_args)
+    return LoopNest(trip=trip,
+                    gamma_r=max(f.reads_per_input) if f.reads_per_input else 0,
+                    gamma_w=max(1, f.writes),
+                    arith_ops=f.arith_ops,
+                    dep_depth=f.dep_depth,
+                    live_values=f.live_values,
+                    has_plm_access=has_plm_access)

@@ -1,0 +1,420 @@
+"""WAMI accelerator components (PERFECT benchmark suite, paper Section 7).
+
+Each component is specified twice, from one dataflow:
+
+  * ``apply``  — the full-frame vectorized JAX implementation used by the
+    runnable pipeline (``pipeline.py``) and the golden tests;
+  * ``kernel`` — the per-iteration scalar body (what one loop iteration
+    of the SystemC module computes).  Its jaxpr is the CDFG from which
+    ``cdfg.py`` extracts gamma_r / gamma_w / arith / depth for Eq. (1)
+    and the hlsim scheduler.
+
+Frame geometry follows PERFECT WAMI: 512x512 16-bit Bayer input frames,
+processed by the accelerator in 128x128 PLM-resident tiles (16 tiles per
+frame = ``outer_repeats``).  The Lucas-Kanade components run once per LK
+refinement iteration (N_LK per frame).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.hlsim import ComponentSpec, LoopNest
+from ...core.knobs import KnobSpace
+from .cdfg import analyze_kernel
+
+__all__ = [
+    "FRAME", "TILE", "N_LK",
+    "WamiComponent", "build_components",
+    "debayer", "grayscale", "gradient", "steepest_descent", "hessian",
+    "sd_update", "matrix_add", "matrix_sub", "matrix_mul", "matrix_reshape",
+    "matrix_invert", "warp_affine", "change_detection",
+]
+
+FRAME = 512          # full frame edge (pixels)
+TILE = 128           # PLM-resident tile edge
+N_LK = 6             # Lucas-Kanade refinement iterations per frame
+_GMM_K = 3           # change-detection mixture size
+
+
+# ======================================================================
+# Full-frame vectorized implementations
+# ======================================================================
+
+def debayer(bayer: jnp.ndarray) -> jnp.ndarray:
+    """Bilinear demosaic of an RGGB Bayer mosaic -> (H, W, 3) float32.
+
+    R G      (0,0)=R (0,1)=G
+    G B      (1,0)=G (1,1)=B
+    """
+    img = bayer.astype(jnp.float32)
+    H, W = img.shape
+    p = jnp.pad(img, 1, mode="reflect")
+    c = p[1:-1, 1:-1]
+    n, s = p[:-2, 1:-1], p[2:, 1:-1]
+    w, e = p[1:-1, :-2], p[1:-1, 2:]
+    nw, ne = p[:-2, :-2], p[:-2, 2:]
+    sw, se = p[2:, :-2], p[2:, 2:]
+    cross = (n + s + w + e) * 0.25
+    diag = (nw + ne + sw + se) * 0.25
+    horiz = (w + e) * 0.5
+    vert = (n + s) * 0.5
+
+    yy, xx = jnp.meshgrid(jnp.arange(H), jnp.arange(W), indexing="ij")
+    r_loc = (yy % 2 == 0) & (xx % 2 == 0)
+    g1_loc = (yy % 2 == 0) & (xx % 2 == 1)
+    g2_loc = (yy % 2 == 1) & (xx % 2 == 0)
+    b_loc = (yy % 2 == 1) & (xx % 2 == 1)
+
+    r = jnp.where(r_loc, c, jnp.where(g1_loc, horiz, jnp.where(g2_loc, vert, diag)))
+    g = jnp.where(r_loc | b_loc, cross, c)
+    b = jnp.where(b_loc, c, jnp.where(g2_loc, horiz, jnp.where(g1_loc, vert, diag)))
+    return jnp.stack([r, g, b], axis=-1)
+
+
+def grayscale(rgb: jnp.ndarray) -> jnp.ndarray:
+    """ITU-R BT.601 luma."""
+    return (0.299 * rgb[..., 0] + 0.587 * rgb[..., 1] + 0.114 * rgb[..., 2])
+
+
+def gradient(gray: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Central-difference image gradient (gx, gy)."""
+    p = jnp.pad(gray, 1, mode="edge")
+    gx = (p[1:-1, 2:] - p[1:-1, :-2]) * 0.5
+    gy = (p[2:, 1:-1] - p[:-2, 1:-1]) * 0.5
+    return gx, gy
+
+
+def steepest_descent(gx: jnp.ndarray, gy: jnp.ndarray) -> jnp.ndarray:
+    """Inverse-compositional LK steepest-descent images for an affine
+    warp with parameters p = (p1..p6): returns (H, W, 6)."""
+    H, W = gx.shape
+    yy, xx = jnp.meshgrid(jnp.arange(H, dtype=gx.dtype),
+                          jnp.arange(W, dtype=gx.dtype), indexing="ij")
+    return jnp.stack([gx * xx, gx * yy, gx, gy * xx, gy * yy, gy], axis=-1)
+
+
+def hessian(sd: jnp.ndarray) -> jnp.ndarray:
+    """Gauss-Newton Hessian H = sum_x sd(x)^T sd(x): (6, 6)."""
+    flat = sd.reshape(-1, 6)
+    return flat.T @ flat
+
+
+def sd_update(sd: jnp.ndarray, err: jnp.ndarray) -> jnp.ndarray:
+    """b = sum_x sd(x)^T err(x): (6,)."""
+    return jnp.einsum("hwk,hw->k", sd, err)
+
+
+def matrix_add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a + b
+
+
+def matrix_sub(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a - b
+
+
+def matrix_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a @ b
+
+
+def matrix_reshape(a: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
+    return a.reshape(shape)
+
+
+def matrix_invert(a: jnp.ndarray) -> jnp.ndarray:
+    """6x6 inverse via Gauss-Jordan (runs in SOFTWARE in the paper's
+    system to preserve floating-point precision — modeled with a fixed
+    effective latency in the TMG, Section 7.1)."""
+    n = a.shape[0]
+    aug = jnp.concatenate([a.astype(jnp.float64) if a.dtype == jnp.float64
+                           else a.astype(jnp.float32),
+                           jnp.eye(n, dtype=a.dtype)], axis=1)
+
+    def step(i, aug):
+        pivot = aug[i, i]
+        row = aug[i] / pivot
+        aug = aug.at[i].set(row)
+        factors = aug[:, i].at[i].set(0.0)
+        return aug - factors[:, None] * row[None, :]
+
+    aug = jax.lax.fori_loop(0, n, step, aug)
+    return aug[:, n:]
+
+
+def warp_affine(img: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Bilinear warp of ``img`` by affine params p=(p1..p6):
+    x' = (1+p1) x + p2 y + p3 ;  y' = p4 x + (1+p5) y + p6."""
+    H, W = img.shape
+    yy, xx = jnp.meshgrid(jnp.arange(H, dtype=img.dtype),
+                          jnp.arange(W, dtype=img.dtype), indexing="ij")
+    sx = (1.0 + p[0]) * xx + p[1] * yy + p[2]
+    sy = p[3] * xx + (1.0 + p[4]) * yy + p[5]
+    x0 = jnp.clip(jnp.floor(sx), 0, W - 2)
+    y0 = jnp.clip(jnp.floor(sy), 0, H - 2)
+    fx = jnp.clip(sx - x0, 0.0, 1.0)
+    fy = jnp.clip(sy - y0, 0.0, 1.0)
+    x0i, y0i = x0.astype(jnp.int32), y0.astype(jnp.int32)
+    i00 = img[y0i, x0i]
+    i01 = img[y0i, x0i + 1]
+    i10 = img[y0i + 1, x0i]
+    i11 = img[y0i + 1, x0i + 1]
+    top = i00 * (1 - fx) + i01 * fx
+    bot = i10 * (1 - fx) + i11 * fx
+    return top * (1 - fy) + bot * fy
+
+
+def change_detection(gray: jnp.ndarray, mu: jnp.ndarray, var: jnp.ndarray,
+                     w: jnp.ndarray, *, lr: float = 0.05,
+                     mahal_thresh: float = 6.25, fg_thresh: float = 0.7
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-pixel Gaussian-mixture background subtraction (K=3).
+
+    Returns (mask, mu', var', w').  State arrays have shape (H, W, K).
+    """
+    x = gray[..., None]
+    d2 = (x - mu) ** 2 / jnp.maximum(var, 1e-4)
+    match = d2 < mahal_thresh                       # (H, W, K)
+    any_match = jnp.any(match, axis=-1)
+    # best (lowest-d2) matching mixture component
+    d2_masked = jnp.where(match, d2, jnp.inf)
+    best = jnp.argmin(d2_masked, axis=-1)
+    onehot = jax.nn.one_hot(best, _GMM_K, dtype=gray.dtype) * any_match[..., None]
+
+    mu_n = mu + onehot * lr * (x - mu)
+    var_n = var + onehot * lr * ((x - mu) ** 2 - var)
+    w_n = (1 - lr) * w + lr * onehot
+    # no match: replace weakest component with a fresh one centred at x
+    weakest = jnp.argmin(w, axis=-1)
+    wh = jax.nn.one_hot(weakest, _GMM_K, dtype=gray.dtype) * (~any_match)[..., None]
+    mu_n = mu_n * (1 - wh) + wh * x
+    var_n = var_n * (1 - wh) + wh * 25.0
+    w_n = w_n * (1 - wh) + wh * lr
+    w_n = w_n / jnp.sum(w_n, axis=-1, keepdims=True)
+    # foreground: matched component is low-weight, or no match at all
+    matched_w = jnp.sum(onehot * w, axis=-1)
+    mask = (~any_match) | (matched_w < (1.0 - fg_thresh))
+    return mask, mu_n, var_n, w_n
+
+
+# ======================================================================
+# Per-iteration scalar kernels (the CDFGs)
+# ======================================================================
+
+def _k_debayer(quad_win: jnp.ndarray) -> jnp.ndarray:
+    """One 2x2 Bayer quad (with 1-px border: 4x4 window) -> 2x2x3 RGB."""
+    w = quad_win
+    out = []
+    for (dy, dx), kind in (((1, 1), "R"), ((1, 2), "G1"),
+                           ((2, 1), "G2"), ((2, 2), "B")):
+        c = w[dy, dx]
+        cross = (w[dy - 1, dx] + w[dy + 1, dx] + w[dy, dx - 1] + w[dy, dx + 1]) * 0.25
+        diag = (w[dy - 1, dx - 1] + w[dy - 1, dx + 1]
+                + w[dy + 1, dx - 1] + w[dy + 1, dx + 1]) * 0.25
+        horiz = (w[dy, dx - 1] + w[dy, dx + 1]) * 0.5
+        vert = (w[dy - 1, dx] + w[dy + 1, dx]) * 0.5
+        if kind == "R":
+            out += [c, cross, diag]
+        elif kind == "G1":
+            out += [horiz, c, vert]
+        elif kind == "G2":
+            out += [vert, c, horiz]
+        else:
+            out += [diag, cross, c]
+    return jnp.stack(out)
+
+
+def _k_grayscale(rgb: jnp.ndarray) -> jnp.ndarray:
+    return 0.299 * rgb[0] + 0.587 * rgb[1] + 0.114 * rgb[2]
+
+
+def _k_gradient(cross: jnp.ndarray) -> jnp.ndarray:
+    # cross = [center, west, east, north, south]
+    return jnp.stack([(cross[2] - cross[1]) * 0.5, (cross[4] - cross[3]) * 0.5])
+
+
+def _k_steep(grad2: jnp.ndarray, xy: jnp.ndarray) -> jnp.ndarray:
+    gx, gy = grad2[0], grad2[1]
+    x, y = xy[0], xy[1]
+    return jnp.stack([gx * x, gx * y, gx, gy * x, gy * y, gy])
+
+
+def _k_hessian(sd6: jnp.ndarray, acc: jnp.ndarray) -> jnp.ndarray:
+    outer = sd6[:, None] * sd6[None, :]
+    iu = jnp.triu_indices(6)
+    return acc + outer[iu]
+
+
+def _k_sd_update(sd6: jnp.ndarray, err: jnp.ndarray, acc: jnp.ndarray) -> jnp.ndarray:
+    return acc + sd6 * err
+
+
+def _k_mat_add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a + b
+
+
+def _k_mat_sub(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a - b
+
+
+def _k_mat_mul(row: jnp.ndarray, col: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(row, col)
+
+
+def _k_mat_resh(a: jnp.ndarray) -> jnp.ndarray:
+    return a * 1.0   # copy through the datapath
+
+
+def _k_warp(neigh: jnp.ndarray, frac: jnp.ndarray) -> jnp.ndarray:
+    fx, fy = frac[0], frac[1]
+    top = neigh[0] * (1 - fx) + neigh[1] * fx
+    bot = neigh[2] * (1 - fx) + neigh[3] * fx
+    return top * (1 - fy) + bot * fy
+
+
+def _k_change_det(px: jnp.ndarray, state9: jnp.ndarray) -> jnp.ndarray:
+    mu, var, w = state9[0:3], state9[3:6], state9[6:9]
+    d2 = (px - mu) ** 2 / jnp.maximum(var, 1e-4)
+    match = d2 < 6.25
+    any_match = jnp.any(match)
+    best = jnp.argmin(jnp.where(match, d2, jnp.inf))
+    onehot = jax.nn.one_hot(best, 3) * any_match
+    lr = 0.05
+    mu_n = mu + onehot * lr * (px - mu)
+    var_n = var + onehot * lr * ((px - mu) ** 2 - var)
+    w_n = (1 - lr) * w + lr * onehot
+    matched_w = jnp.sum(onehot * w)
+    mask = (~any_match) | (matched_w < 0.3)
+    return jnp.concatenate([mu_n, var_n, w_n, mask[None].astype(mu.dtype)])
+
+
+# ======================================================================
+# Component table
+# ======================================================================
+
+@dataclass
+class WamiComponent:
+    """Binds the functional implementation to its synthesis model."""
+
+    name: str
+    apply: Callable
+    kernel: Callable
+    kernel_args: Tuple
+    trip: int                      # dominant-loop iterations per execution
+    words_in: int
+    words_out: int
+    outer_repeats: int
+    knobs: KnobSpace
+    plm_words: int = 0
+    gamma_r_override: Optional[int] = None   # e.g. register-cached state
+    gamma_w_override: Optional[int] = None   # e.g. register accumulators
+    has_plm_access: bool = True
+
+    def loop_nest(self) -> LoopNest:
+        f = analyze_kernel(self.kernel, self.kernel_args)
+        g_r = self.gamma_r_override
+        if g_r is None:
+            g_r = max(f.reads_per_input) if f.reads_per_input else 0
+        g_w = self.gamma_w_override
+        if g_w is None:
+            g_w = max(1, f.writes)
+        return LoopNest(trip=self.trip, gamma_r=g_r, gamma_w=g_w,
+                        arith_ops=f.arith_ops, dep_depth=f.dep_depth,
+                        live_values=f.live_values,
+                        has_plm_access=self.has_plm_access)
+
+    def spec(self) -> ComponentSpec:
+        return ComponentSpec(name=self.name, loop=self.loop_nest(),
+                             words_in=self.words_in, words_out=self.words_out,
+                             word_bits=32, plm_words=self.plm_words,
+                             outer_repeats=self.outer_repeats)
+
+
+def build_components(tile: int = TILE, frame: int = FRAME,
+                     n_lk: int = N_LK) -> Dict[str, WamiComponent]:
+    """The 12 synthesizable WAMI components (Table 1) + their knob spaces.
+
+    Knob bounds follow Section 7.2: 'a number of ports in the interval
+    [1, 16] and a maximum number of unrolls in the interval [8, 32],
+    depending on the components'.
+    """
+    t2 = tile * tile
+    tiles = (frame // tile) ** 2
+    f32 = jnp.float32
+    v = lambda *shape: jnp.zeros(shape, f32)
+    s = jnp.zeros((), f32)
+
+    def ks(max_ports, max_unrolls):
+        return KnobSpace(clock_ns=1.0, max_ports=max_ports, max_unrolls=max_unrolls)
+
+    comps = {
+        "debayer": WamiComponent(
+            name="debayer", apply=debayer,
+            kernel=_k_debayer, kernel_args=(v(4, 4),),
+            trip=t2 // 4, words_in=t2, words_out=3 * t2,
+            outer_repeats=tiles, knobs=ks(16, 32)),
+        "grayscale": WamiComponent(
+            name="grayscale", apply=grayscale,
+            kernel=_k_grayscale, kernel_args=(v(3),),
+            trip=t2, words_in=3 * t2, words_out=t2,
+            outer_repeats=tiles, knobs=ks(16, 32)),
+        "gradient": WamiComponent(
+            name="gradient", apply=gradient,
+            kernel=_k_gradient, kernel_args=(v(5),),
+            trip=t2, words_in=t2, words_out=2 * t2,
+            outer_repeats=tiles, knobs=ks(16, 32)),
+        "steep_descent": WamiComponent(
+            name="steep_descent", apply=steepest_descent,
+            kernel=_k_steep, kernel_args=(v(2), v(2)),
+            trip=t2, words_in=2 * t2, words_out=6 * t2,
+            outer_repeats=tiles, knobs=ks(8, 16)),
+        "hessian": WamiComponent(
+            name="hessian", apply=hessian,
+            kernel=_k_hessian, kernel_args=(v(6), v(21)),
+            trip=t2, words_in=6 * t2, words_out=21,
+            outer_repeats=tiles, knobs=ks(16, 32),
+            gamma_w_override=1),          # accumulator lives in registers
+        "sd_update": WamiComponent(
+            name="sd_update", apply=sd_update,
+            kernel=_k_sd_update, kernel_args=(v(6), s, v(6)),
+            trip=t2, words_in=7 * t2, words_out=6,
+            outer_repeats=tiles * n_lk, knobs=ks(16, 32),
+            gamma_w_override=1),
+        "matrix_sub": WamiComponent(
+            name="matrix_sub", apply=matrix_sub,
+            kernel=_k_mat_sub, kernel_args=(s, s),
+            trip=t2, words_in=2 * t2, words_out=t2,
+            outer_repeats=tiles * n_lk, knobs=ks(8, 16)),
+        "matrix_add": WamiComponent(
+            name="matrix_add", apply=matrix_add,
+            kernel=_k_mat_add, kernel_args=(s, s),
+            trip=36, words_in=72, words_out=36,
+            outer_repeats=n_lk, knobs=ks(4, 8)),
+        "matrix_mul": WamiComponent(
+            name="matrix_mul", apply=matrix_mul,
+            kernel=_k_mat_mul, kernel_args=(v(6), v(6)),
+            trip=36, words_in=72, words_out=36,
+            outer_repeats=n_lk, knobs=ks(4, 12)),
+        "matrix_resh": WamiComponent(
+            name="matrix_resh", apply=lambda a: matrix_reshape(a, (-1,)),
+            kernel=_k_mat_resh, kernel_args=(s,),
+            trip=36, words_in=36, words_out=36,
+            outer_repeats=n_lk, knobs=ks(2, 8)),
+        "warp": WamiComponent(
+            name="warp", apply=warp_affine,
+            kernel=_k_warp, kernel_args=(v(4), v(2)),
+            trip=t2, words_in=t2, words_out=t2,
+            outer_repeats=tiles * n_lk, knobs=ks(8, 16)),
+        "change_det": WamiComponent(
+            name="change_det", apply=change_detection,
+            kernel=_k_change_det, kernel_args=(s, v(9)),
+            trip=t2, words_in=10 * t2, words_out=10 * t2,
+            outer_repeats=tiles, knobs=ks(8, 16),
+            gamma_r_override=1),          # GMM state cached in registers
+    }
+    return comps

@@ -1,0 +1,183 @@
+"""The WAMI application: Lucas-Kanade alignment + change detection.
+
+This is the paper's case study (Section 7) as a runnable JAX program,
+plus its TMG system model (Fig. 8) and the COSMOS entry points used by
+the benchmarks:
+
+  * :func:`lucas_kanade` — inverse-compositional LK affine registration
+    built from the WAMI components;
+  * :func:`wami_app` — frame-stream driver: debayer -> grayscale -> LK
+    align -> warp -> GMM change detection;
+  * :func:`wami_tmg` — the Fig. 8 timed marked graph (Matrix-Inv is a
+    software transition with fixed latency);
+  * :func:`wami_cosmos` / :func:`wami_exhaustive` — DSE drivers.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core import (CosmosResult, CountingTool, ExhaustiveResult, HLSTool,
+                     KnobSpace, Place, TMG, Transition, cosmos_dse,
+                     exhaustive_dse)
+from . import components as C
+
+__all__ = ["lucas_kanade", "wami_app", "wami_tmg", "wami_hls_tool",
+           "wami_knob_spaces", "wami_cosmos", "wami_exhaustive",
+           "MATRIX_INV_LATENCY_S"]
+
+# Matrix-Inv runs in software (Section 7.1): fixed effective latency.
+# 6x6 Gauss-Jordan on an embedded core, amortized per frame.
+MATRIX_INV_LATENCY_S = 40e-6
+
+
+# ----------------------------------------------------------------------
+# Functional pipeline
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def lucas_kanade(template: jnp.ndarray, image: jnp.ndarray,
+                 n_iters: int = C.N_LK) -> jnp.ndarray:
+    """Inverse-compositional LK: find affine p aligning ``image`` to
+    ``template``.  Returns p=(p1..p6)."""
+    gx, gy = C.gradient(template)
+    sd = C.steepest_descent(gx, gy)                      # (H, W, 6)
+    H = C.hessian(sd)                                    # (6, 6)
+    Hinv = C.matrix_invert(H + 1e-3 * jnp.eye(6, dtype=H.dtype))
+
+    def step(p, _):
+        warped = C.warp_affine(image, p)
+        err = C.matrix_sub(warped, template)             # error image
+        b = C.sd_update(sd, err)                         # (6,)
+        dp = C.matrix_reshape(C.matrix_mul(Hinv, b), (6,))
+        # inverse-compositional update: p <- p ∘ dp^-1 (first-order)
+        p_new = C.matrix_sub(p, dp)
+        return C.matrix_add(p_new, jnp.zeros_like(p_new)), None
+
+    p0 = jnp.zeros(6, dtype=template.dtype)
+    p, _ = jax.lax.scan(step, p0, None, length=n_iters)
+    return p
+
+
+def wami_app(bayer_frames: jnp.ndarray, n_iters: int = C.N_LK
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """End-to-end WAMI over a stream of Bayer frames (T, H, W).
+
+    Returns (masks (T-1, H, W) bool, warp params (T-1, 6)).
+    """
+    grays = jax.vmap(lambda f: C.grayscale(C.debayer(f)))(bayer_frames)
+    template = grays[0]
+    Himg, Wimg = template.shape
+    mu0 = jnp.repeat(template[..., None], 3, axis=-1)
+    var0 = jnp.full((Himg, Wimg, 3), 36.0, template.dtype)
+    w0 = jnp.full((Himg, Wimg, 3), 1.0 / 3.0, template.dtype)
+
+    def step(carry, gray):
+        mu, var, w = carry
+        p = lucas_kanade(template, gray, n_iters=n_iters)
+        aligned = C.warp_affine(gray, p)
+        mask, mu, var, w = C.change_detection(aligned, mu, var, w)
+        return (mu, var, w), (mask, p)
+
+    (_, _, _), (masks, ps) = jax.lax.scan(step, (mu0, var0, w0), grays[1:])
+    return masks, ps
+
+
+# ----------------------------------------------------------------------
+# System model (Fig. 8)
+# ----------------------------------------------------------------------
+
+def wami_tmg(buffers: int = 2, frames_in_flight: int = 4) -> TMG:
+    """The WAMI TMG.  Forward edges carry no initial tokens; each has a
+    backward capacity edge with ``buffers`` tokens (ping-pong channels,
+    Fig. 3).  The LK refinement loop is an algorithmic feedback cycle
+    with a single token (iterations serialize), and the frame stream is
+    closed by a feedback place carrying the frames in flight."""
+    names = ["debayer", "grayscale", "gradient", "steep_descent", "hessian",
+             "matrix_inv", "warp", "matrix_sub", "sd_update", "matrix_mul",
+             "matrix_add", "matrix_resh", "change_det"]
+    ts = [Transition(n) for n in names]
+    places: List[Place] = []
+
+    def chain(a: str, b: str, tokens_fwd: int = 0):
+        places.append(Place(f"fwd:{a}->{b}", a, b, tokens=tokens_fwd))
+        places.append(Place(f"cap:{b}->{a}", b, a, tokens=buffers))
+
+    # main stream
+    chain("debayer", "grayscale")
+    chain("grayscale", "gradient")
+    # template side of LK
+    chain("gradient", "steep_descent")
+    chain("steep_descent", "hessian")
+    chain("hessian", "matrix_inv")
+    chain("matrix_inv", "matrix_mul")
+    # image side of LK (iterated)
+    chain("grayscale", "warp")
+    chain("warp", "matrix_sub")
+    chain("matrix_sub", "sd_update")
+    chain("sd_update", "matrix_mul")
+    chain("matrix_mul", "matrix_add")
+    chain("matrix_add", "matrix_resh")
+    # LK refinement loop: new params feed the next warp; one token, so
+    # the refinement chain serializes per iteration.
+    places.append(Place("alg:matrix_resh->warp", "matrix_resh", "warp", tokens=1))
+    chain("matrix_resh", "change_det")
+    # self-capacity (a module cannot re-fire while busy)
+    for n in names:
+        places.append(Place(f"self:{n}", n, n, tokens=1))
+    # close the frame stream
+    places.append(Place("loop:change_det->debayer", "change_det", "debayer",
+                        tokens=frames_in_flight + len(names)))
+    return TMG(ts, places)
+
+
+# ----------------------------------------------------------------------
+# DSE drivers
+# ----------------------------------------------------------------------
+
+def wami_hls_tool(noise: float = 1.0, tile: int = C.TILE,
+                  frame: int = C.FRAME) -> HLSTool:
+    comps = C.build_components(tile=tile, frame=frame)
+    return HLSTool({n: c.spec() for n, c in comps.items()}, noise=noise)
+
+
+def wami_knob_spaces(tile: int = C.TILE, frame: int = C.FRAME
+                     ) -> Dict[str, KnobSpace]:
+    comps = C.build_components(tile=tile, frame=frame)
+    return {n: c.knobs for n, c in comps.items()}
+
+
+def wami_cosmos(delta: float = 0.25, noise: float = 1.0,
+                counting: Optional[CountingTool] = None) -> CosmosResult:
+    """Run the full COSMOS methodology on WAMI (the paper's experiment)."""
+    tool = wami_hls_tool(noise=noise)
+    return cosmos_dse(wami_tmg(), tool, wami_knob_spaces(), delta=delta,
+                      fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
+                      counting=counting)
+
+
+def wami_exhaustive(noise: float = 1.0,
+                    counting: Optional[CountingTool] = None) -> ExhaustiveResult:
+    """The exhaustive baseline: synthesize every knob combination."""
+    tool = wami_hls_tool(noise=noise)
+    spaces = wami_knob_spaces()
+    comps = [n for n in spaces]     # matrix_inv excluded (software)
+    return exhaustive_dse(comps, tool, spaces, counting=counting)
+
+
+def wami_cosmos_no_memory(delta: float = 0.25, noise: float = 1.0
+                          ) -> CosmosResult:
+    """Table 1's 'No Memory' reference: the PLM is not part of the DSE —
+    only standard dual-port memories are used (ports fixed at 2), and the
+    exploration reduces to the unroll knob."""
+    tool = wami_hls_tool(noise=noise)
+    spaces = {n: KnobSpace(clock_ns=s.clock_ns, min_ports=2, max_ports=2,
+                           max_unrolls=s.max_unrolls)
+              for n, s in wami_knob_spaces().items()}
+    return cosmos_dse(wami_tmg(), tool, spaces, delta=delta,
+                      fixed={"matrix_inv": MATRIX_INV_LATENCY_S})

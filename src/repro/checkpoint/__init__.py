@@ -1,0 +1,6 @@
+"""Step-atomic sharded checkpointing (sync + async)."""
+
+from .async_ckpt import AsyncCheckpointer
+from .store import latest_step, list_steps, restore, save
+
+__all__ = ["save", "restore", "latest_step", "list_steps", "AsyncCheckpointer"]

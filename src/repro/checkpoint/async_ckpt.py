@@ -1,0 +1,68 @@
+"""Asynchronous checkpointing: snapshot to host, write in background.
+
+``save_async`` copies device arrays to host numpy synchronously (cheap —
+bounded by PCIe/ICI, not disk) and hands the serialized write to a single
+worker thread, so training resumes while the previous step is still
+hitting disk.  At most one write is in flight; a second request waits for
+the first (bounded memory).  ``wait()`` drains the queue — call before
+exiting or measuring.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from . import store
+
+__all__ = ["AsyncCheckpointer"]
+
+
+class AsyncCheckpointer:
+    def __init__(self, root: str, *, keep_last: int = 3):
+        self.root = root
+        self.keep_last = keep_last
+        self._lock = threading.Lock()
+        self._pending: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        self.wait()                              # one write in flight
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                store.save(self.root, step, host_tree, extra=extra)
+                self._gc()
+            except BaseException as e:          # surfaced on next wait()
+                self._error = e
+
+        t = threading.Thread(target=work, daemon=True)
+        with self._lock:
+            self._pending = t
+        t.start()
+
+    def wait(self):
+        with self._lock:
+            t, self._pending = self._pending, None
+        if t is not None:
+            t.join()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = store.list_steps(self.root)
+        for s in steps[:-self.keep_last]:
+            import shutil, os
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.wait()

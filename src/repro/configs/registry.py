@@ -1,0 +1,57 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .base import SHAPES, ModelConfig, ShapeSpec
+from .gemma2_9b import CONFIG as _gemma2_9b
+from .kimi_k2 import CONFIG as _kimi_k2
+from .mamba2_780m import CONFIG as _mamba2_780m
+from .nemotron4_15b import CONFIG as _nemotron4_15b
+from .phi35_moe import CONFIG as _phi35_moe
+from .qwen2_0_5b import CONFIG as _qwen2_0_5b
+from .qwen2_vl_72b import CONFIG as _qwen2_vl_72b
+from .starcoder2_7b import CONFIG as _starcoder2_7b
+from .whisper_large_v3 import CONFIG as _whisper_large_v3
+from .zamba2_2_7b import CONFIG as _zamba2_2_7b
+
+__all__ = ["ARCHS", "get_config", "get_shape", "list_archs", "cells"]
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c for c in (
+        _qwen2_0_5b, _gemma2_9b, _starcoder2_7b, _nemotron4_15b,
+        _kimi_k2, _phi35_moe, _whisper_large_v3, _mamba2_780m,
+        _qwen2_vl_72b, _zamba2_2_7b,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).reduced()
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeSpec:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; available: {[s.name for s in SHAPES]}")
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCHS)
+
+
+def cells() -> List[tuple]:
+    """All 40 (arch, shape) cells with applicability verdicts."""
+    out = []
+    for a in list_archs():
+        cfg = ARCHS[a]
+        for s in SHAPES:
+            ok, why = s.applicable(cfg)
+            out.append((a, s.name, ok, why))
+    return out

@@ -1,0 +1,44 @@
+"""COSMOS core: compositional DSE coordinating synthesis + memory tools.
+
+This package is the paper's primary contribution, implemented generically
+over a ``SynthesisTool`` oracle:
+
+  * :mod:`repro.core.tmg` — timed-marked-graph system model (Section 2.2)
+  * :mod:`repro.core.characterize` — Algorithm 1 (Section 5)
+  * :mod:`repro.core.planning` — Eq. (2) LP synthesis planning (Section 6.1)
+  * :mod:`repro.core.mapping` — Eq. (4/5) synthesis mapping (Section 6.2)
+  * :mod:`repro.core.dse` — full driver + exhaustive baseline (Section 7)
+  * :mod:`repro.core.hlsim` / :mod:`repro.core.memgen` — the simulated
+    HLS + Mnemosyne oracles (DESIGN.md Section 2)
+  * :mod:`repro.core.autotune` — the TPU instantiation: XLA compiles as
+    the synthesis oracle, sharding/remat as the memory knobs
+"""
+
+from .characterize import CharacterizationResult, characterize_component, spans
+from .dse import (CosmosResult, ExhaustiveResult, SystemPoint,
+                  compose_exhaustive, cosmos_dse, exhaustive_dse)
+from .hlsim import ComponentSpec, HLSTool, LoopNest
+from .knobs import (CDFGFacts, CountingTool, KnobSpace, Region, Synthesis,
+                    SynthesisTool, powers_of_two)
+from .mapping import MapOutcome, map_target, phi
+from .memgen import MemGen, PLM, PLMSpec
+from .pareto import (DesignPoint, check_delta_curve, pareto_front_max_min,
+                     pareto_front_min_min, span)
+from .planning import (ComponentModel, PiecewiseLinearCost, PlanPoint, plan,
+                       sweep, theta_bounds)
+from .tmg import TMG, Place, Transition, feedback_pipeline_tmg, pipeline_tmg
+
+__all__ = [
+    "TMG", "Place", "Transition", "pipeline_tmg", "feedback_pipeline_tmg",
+    "DesignPoint", "pareto_front_min_min", "pareto_front_max_min", "span",
+    "check_delta_curve",
+    "KnobSpace", "Region", "Synthesis", "CDFGFacts", "SynthesisTool",
+    "CountingTool", "powers_of_two",
+    "ComponentSpec", "LoopNest", "HLSTool", "MemGen", "PLM", "PLMSpec",
+    "CharacterizationResult", "characterize_component", "spans",
+    "ComponentModel", "PiecewiseLinearCost", "PlanPoint", "plan", "sweep",
+    "theta_bounds",
+    "phi", "map_target", "MapOutcome",
+    "cosmos_dse", "CosmosResult", "exhaustive_dse", "ExhaustiveResult",
+    "compose_exhaustive", "SystemPoint",
+]

@@ -1,0 +1,160 @@
+"""COSMOS-TPU: the paper's methodology with XLA as the synthesis oracle.
+
+Mapping (DESIGN.md §2): one ``lower().compile()`` on the production mesh
+is the expensive tool invocation; the memory planner below is the
+Mnemosyne analogue (it prices a knob setting in HBM bytes *analytically*
+so the LP/mapping layer can plan without compiling); the knobs are
+
+  * ``microbatches``  — the unroll analogue (time/space trade at fixed
+    sharding; pow-2);
+  * ``remat``         — activation-checkpoint policy (none/dots/full);
+  * ``accum_dtype``   — fp32 vs bf16 gradient accumulation.
+
+``choose_train_knobs`` is Algorithm-1-shaped: walk the knob ladder from
+cheapest-latency to cheapest-memory, keep the first point whose PRICED
+footprint fits the HBM budget, then confirm with a single compile (the
+invocation-frugality argument of the paper, applied to XLA).  The priced
+model is also what ``repro.ft.elastic`` re-plans against on a mesh
+change — characterization is reused, only the mapped compile re-runs.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from ..configs.base import ModelConfig, ShapeSpec
+
+__all__ = ["MemoryPlan", "price_train_step", "choose_train_knobs",
+           "HBM_BYTES_PER_CHIP"]
+
+HBM_BYTES_PER_CHIP = 16 * 1024 ** 3          # TPU v5e
+
+
+@dataclass(frozen=True)
+class MemoryPlan:
+    microbatches: int
+    remat: str
+    accum_dtype: str
+    est_bytes: int
+    breakdown: Dict[str, float]
+
+    @property
+    def fits(self) -> bool:
+        return self.est_bytes <= HBM_BYTES_PER_CHIP
+
+
+def _mesh_sizes(mesh_shape: Dict[str, int]) -> Tuple[int, int]:
+    data = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    model = mesh_shape.get("model", 1)
+    return data, model
+
+
+def price_train_step(cfg: ModelConfig, shape: ShapeSpec,
+                     mesh_shape: Dict[str, int], *, microbatches: int,
+                     remat: str, accum_dtype: str = "float32"
+                     ) -> MemoryPlan:
+    """Analytic HBM footprint of one train step (per device, bytes).
+
+    The napkin model behind every COSMOS-TPU planning decision; §Perf
+    records its predictions against ``memory_analysis()`` ground truth.
+    """
+    dp, tp = _mesh_sizes(mesh_shape)
+    B, S = shape.global_batch, shape.seq_len
+    b_loc = max(1, B // dp) / max(1, microbatches)   # tokens rows per mb
+    d, L = cfg.d_model, cfg.n_layers
+    N = cfg.param_count()
+    N_shardable = max(N - cfg.vocab * d, 1)
+
+    # ---- static state ---------------------------------------------------
+    params = 2.0 * N / tp                            # bf16, TP-sharded
+    grads = (4.0 if accum_dtype == "float32" else 2.0) * N / tp
+    opt = 8.0 * N / (tp * dp)                        # fp32 mu+nu, ZeRO-1
+    if cfg.family == "moe":
+        # experts can shard 2D (model x data)
+        params = 2.0 * N / (tp * dp) + 2.0 * cfg.vocab * d / tp
+        grads = grads / dp
+        opt = 8.0 * N / (tp * dp)
+
+    # ---- residuals (layer boundaries saved by remat='full') ------------
+    resid = L * b_loc * S * d * 2.0
+    if remat == "none":
+        # everything live: roughly x(10-20 tensors)/layer
+        resid *= 12.0
+    elif remat == "dots":
+        resid *= 4.0
+
+    # ---- peak transient inside one layer (recompute included) ----------
+    H = max(cfg.n_heads, 1)
+    heads_tp = H / tp if H % tp == 0 else 1.0
+    if cfg.family in ("ssm", "hybrid"):
+        Q = cfg.ssm_chunk
+        n_ch = max(1, S // Q)
+        hd_heads = cfg.ssm_heads()
+        trans = (b_loc * Q * Q * hd_heads * 4.0      # decay matrices
+                 + 4 * b_loc * S * cfg.d_inner() * 4.0 / tp) * 1.5
+        trans += n_ch * b_loc * Q * Q * hd_heads * 4.0 / 4  # scan residuals
+    else:
+        kvc = 1024 if S >= 16384 else S
+        trans = b_loc * (H / max(heads_tp, 1)) ** 0 * heads_tp * S * kvc * 4.0
+        trans += 3 * b_loc * S * max(cfg.d_ff, cfg.expert_ff()) * 2.0 / tp
+    if cfg.family == "moe":
+        cap = b_loc * S * cfg.top_k * cfg.capacity_factor
+        trans += 3 * cap * d * 2.0 / tp + cap * cfg.expert_ff() * 2.0 / tp
+
+    # ---- loss chunk ------------------------------------------------------
+    chunk = 512 if cfg.vocab >= 65536 else S
+    loss = 2 * b_loc * chunk * cfg.vocab * 4.0 / tp
+
+    # calibrated against compiled memory_analysis() on gemma2-9b /
+    # qwen2-vl-72b train cells: XLA keeps ~2.2x the naive live-set in the
+    # layer backward (multiple f32 score/grad buffers in flight)
+    xla_fudge = 2.2
+    total = params + grads + opt + xla_fudge * (resid + trans + loss)
+    return MemoryPlan(
+        microbatches=microbatches, remat=remat, accum_dtype=accum_dtype,
+        est_bytes=int(total),
+        breakdown={"params": params, "grads": grads, "opt": opt,
+                   "residuals": resid, "transient": trans, "loss": loss})
+
+
+_LADDER = [
+    # fastest -> most memory-frugal (the Algorithm-1 walk)
+    dict(microbatches=1, remat="dots"),
+    dict(microbatches=1, remat="full"),
+    dict(microbatches=2, remat="full"),
+    dict(microbatches=4, remat="full"),
+    dict(microbatches=8, remat="full"),
+    dict(microbatches=16, remat="full"),
+    dict(microbatches=32, remat="full"),
+    dict(microbatches=64, remat="full"),
+]
+
+
+def choose_train_knobs(cfg: ModelConfig, shape: ShapeSpec,
+                       mesh_shape: Dict[str, int], *,
+                       budget: int = HBM_BYTES_PER_CHIP,
+                       slack: float = 0.90) -> MemoryPlan:
+    """Pick the fastest knob setting whose priced footprint fits.
+
+    Models >30B accumulate gradients in bf16 (halves the standing grad
+    buffer; the EF-compression module covers the numerics argument).
+    Falls back to the most frugal rung if nothing fits (the caller
+    reports the deficit honestly).
+    """
+    accum = "bfloat16" if cfg.param_count() > 30e9 else "float32"
+    dp, _ = _mesh_sizes(mesh_shape)
+    best = None
+    for rung in _LADDER:
+        if shape.global_batch // dp < rung["microbatches"]:
+            break                      # cannot split further
+        plan = price_train_step(cfg, shape, mesh_shape,
+                                microbatches=rung["microbatches"],
+                                remat=rung["remat"], accum_dtype=accum)
+        best = plan
+        if plan.est_bytes <= budget * slack:
+            return plan
+    return best if best is not None else price_train_step(
+        cfg, shape, mesh_shape, microbatches=1, remat="full",
+        accum_dtype=accum)

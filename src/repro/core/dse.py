@@ -1,0 +1,190 @@
+"""The full COSMOS driver (Fig. 1) and the exhaustive-search baseline.
+
+COSMOS = component characterization (Algorithm 1) + synthesis planning
+(Eq. 2 LP over the TMG) + synthesis mapping (phi).  The exhaustive
+baseline synthesizes every (ports x unrolls) combination per component —
+the paper's Fig. 11 reference — and, for small systems, composes the
+per-component Pareto fronts to the exact system front (Fig. 5), which is
+what COSMOS's mapped curve is validated against in the tests.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .characterize import CharacterizationResult, characterize_component
+from .knobs import CountingTool, KnobSpace, SynthesisTool
+from .mapping import MapOutcome, map_target
+from .pareto import DesignPoint, pareto_front_max_min, pareto_front_min_min
+from .planning import ComponentModel, PlanPoint, sweep, theta_bounds
+from .tmg import TMG
+
+__all__ = ["SystemPoint", "CosmosResult", "cosmos_dse",
+           "ExhaustiveResult", "exhaustive_dse", "compose_exhaustive"]
+
+
+@dataclass(frozen=True)
+class SystemPoint:
+    """A mapped system implementation (one point of Fig. 10)."""
+
+    theta_planned: float
+    cost_planned: float
+    theta_actual: float
+    cost_actual: float
+    outcomes: Tuple[MapOutcome, ...]
+
+    @property
+    def sigma_mismatch(self) -> float:
+        """sigma(d_p, d_m) = |d_m - d_p| / d_p  (Section 7.3)."""
+        if self.cost_planned <= 0:
+            return float("inf")
+        return abs(self.cost_actual - self.cost_planned) / self.cost_planned
+
+    def as_design_point(self) -> DesignPoint:
+        return DesignPoint(perf=self.theta_actual, cost=self.cost_actual)
+
+
+@dataclass
+class CosmosResult:
+    characterizations: Dict[str, CharacterizationResult]
+    planned: List[PlanPoint]
+    mapped: List[SystemPoint]
+    invocations: Dict[str, int]         # total per component (char + map)
+    theta_min: float
+    theta_max: float
+
+    @property
+    def total_invocations(self) -> int:
+        return sum(self.invocations.values())
+
+    def pareto(self) -> List[DesignPoint]:
+        return pareto_front_max_min([m.as_design_point() for m in self.mapped])
+
+
+def cosmos_dse(tmg: TMG, tool: SynthesisTool, spaces: Dict[str, KnobSpace],
+               *, delta: float = 0.25,
+               fixed: Optional[Dict[str, float]] = None,
+               counting: Optional[CountingTool] = None) -> CosmosResult:
+    """Run the complete COSMOS methodology on a system TMG.
+
+    ``spaces`` maps component name -> knob bounds; ``fixed`` maps
+    components executed in software (Matrix-Inv in Fig. 8) to their fixed
+    effective latency — they are excluded from synthesis.
+    """
+    fixed = fixed or {}
+    ctool = counting or CountingTool(tool)
+
+    # ---- step 1: component characterization (Algorithm 1) -------------
+    chars: Dict[str, CharacterizationResult] = {}
+    models: Dict[str, ComponentModel] = {}
+    for t in tmg.transitions:
+        name = t.name
+        if name in fixed:
+            models[name] = ComponentModel.fixed_latency(name, fixed[name])
+            continue
+        res = characterize_component(ctool, name, spaces[name])
+        chars[name] = res
+        models[name] = ComponentModel.from_regions(name, res.regions)
+
+    # ---- step 2a: synthesis planning (Eq. 2 sweep) ---------------------
+    th_lo, th_hi = theta_bounds(tmg, models)
+    planned = sweep(tmg, models, delta)
+
+    # ---- step 2b: synthesis mapping (phi) ------------------------------
+    mapped: List[SystemPoint] = []
+    for plan_pt in planned:
+        outcomes: List[MapOutcome] = []
+        lam_actual: Dict[str, float] = {}
+        cost_actual = 0.0
+        for t in tmg.transitions:
+            name = t.name
+            if name in fixed:
+                lam_actual[name] = fixed[name]
+                continue
+            out = map_target(ctool, name, chars[name].regions,
+                             plan_pt.lam_targets[name])
+            outcomes.append(out)
+            lam_actual[name] = out.synthesis.lam
+            cost_actual += out.synthesis.area
+        theta_actual = tmg.throughput(lam_actual)
+        mapped.append(SystemPoint(theta_planned=plan_pt.theta,
+                                  cost_planned=plan_pt.cost,
+                                  theta_actual=theta_actual,
+                                  cost_actual=cost_actual,
+                                  outcomes=tuple(outcomes)))
+
+    return CosmosResult(characterizations=chars, planned=planned,
+                        mapped=mapped, invocations=dict(ctool.invocations),
+                        theta_min=th_lo, theta_max=th_hi)
+
+
+# ----------------------------------------------------------------------
+# Exhaustive baseline (Section 3.3 / Fig. 11 reference)
+# ----------------------------------------------------------------------
+@dataclass
+class ExhaustiveResult:
+    points: Dict[str, List[DesignPoint]]     # every synthesized point
+    fronts: Dict[str, List[DesignPoint]]     # per-component Pareto fronts
+    invocations: Dict[str, int]
+
+    @property
+    def total_invocations(self) -> int:
+        return sum(self.invocations.values())
+
+    def combinations(self) -> float:
+        """Number of system-level combinations an exhaustive composition
+        must check: prod_i |front_i| (paper: > 9e12 for WAMI)."""
+        out = 1.0
+        for f in self.fronts.values():
+            out *= max(1, len(f))
+        return out
+
+
+def exhaustive_dse(components: Sequence[str], tool: SynthesisTool,
+                   spaces: Dict[str, KnobSpace],
+                   counting: Optional[CountingTool] = None) -> ExhaustiveResult:
+    """Step (i) of the exhaustive method: synthesize ALL knob combinations."""
+    ctool = counting or CountingTool(tool)
+    points: Dict[str, List[DesignPoint]] = {}
+    for name in components:
+        space = spaces[name]
+        pts: List[DesignPoint] = []
+        for ports in space.ports():
+            for unrolls in range(max(1, ports), space.max_unrolls + 1):
+                s = ctool.synthesize(name, unrolls=unrolls, ports=ports)
+                if s.feasible:
+                    pts.append(DesignPoint(
+                        perf=s.lam, cost=s.area,
+                        knobs=(("ports", ports), ("unrolls", unrolls))))
+        points[name] = pts
+    fronts = {n: pareto_front_min_min(p) for n, p in points.items()}
+    return ExhaustiveResult(points=points, fronts=fronts,
+                            invocations=dict(ctool.invocations))
+
+
+def compose_exhaustive(tmg: TMG, fronts: Dict[str, List[DesignPoint]],
+                       fixed: Optional[Dict[str, float]] = None,
+                       limit: int = 2_000_000) -> List[DesignPoint]:
+    """Step (iii): compose per-component Pareto points into the exact
+    system front.  Exponential — only for small systems / tests."""
+    fixed = fixed or {}
+    names = [t.name for t in tmg.transitions]
+    choice_lists: List[List[Tuple[float, float]]] = []
+    for n in names:
+        if n in fixed:
+            choice_lists.append([(fixed[n], 0.0)])
+        else:
+            choice_lists.append([(p.perf, p.cost) for p in fronts[n]])
+    total = 1
+    for cl in choice_lists:
+        total *= len(cl)
+    if total > limit:
+        raise ValueError(f"{total} combinations exceed limit {limit}")
+    out: List[DesignPoint] = []
+    for combo in itertools.product(*choice_lists):
+        delays = {n: c[0] for n, c in zip(names, combo)}
+        cost = sum(c[1] for c in combo)
+        out.append(DesignPoint(perf=tmg.throughput(delays), cost=cost))
+    return pareto_front_max_min(out)

@@ -1,0 +1,104 @@
+"""Pareto utilities: dominance, fronts, spans, and delta-granularity curves.
+
+Conventions follow the paper:
+  * a design point is (performance, cost); for components performance is
+    the effective latency lambda (lower is better) and cost is the area
+    alpha (lower is better);
+  * for systems, performance is the effective throughput theta (HIGHER is
+    better) and cost is alpha (lower is better);
+  * span = max/min over a point set for one metric (Section 1.3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "DesignPoint",
+    "dominates_min_min",
+    "dominates_max_min",
+    "pareto_front_min_min",
+    "pareto_front_max_min",
+    "span",
+    "check_delta_curve",
+]
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    """A synthesized implementation.
+
+    ``perf``: latency (component view) or throughput (system view).
+    ``cost``: area (mm^2 for hlsim; HBM bytes/device for the TPU tool).
+    ``knobs``: the knob assignment that produced it.
+    ``meta``: free-form (e.g. per-component lambda breakdown at system level).
+    """
+
+    perf: float
+    cost: float
+    knobs: Tuple[Tuple[str, int], ...] = ()
+    meta: Tuple[Tuple[str, float], ...] = ()
+
+    def knob(self, name: str) -> int:
+        return dict(self.knobs)[name]
+
+
+def dominates_min_min(a: DesignPoint, b: DesignPoint) -> bool:
+    """a dominates b when both metrics are to be minimized (lambda, alpha)."""
+    return (a.perf <= b.perf and a.cost <= b.cost) and (a.perf < b.perf or a.cost < b.cost)
+
+
+def dominates_max_min(a: DesignPoint, b: DesignPoint) -> bool:
+    """a dominates b when perf=theta is maximized and cost minimized."""
+    return (a.perf >= b.perf and a.cost <= b.cost) and (a.perf > b.perf or a.cost < b.cost)
+
+
+def _front(points: Sequence[DesignPoint], dom) -> List[DesignPoint]:
+    pts = list(points)
+    out: List[DesignPoint] = []
+    for p in pts:
+        if not any(dom(q, p) for q in pts if q is not p):
+            out.append(p)
+    # dedupe identical (perf, cost) pairs
+    seen, uniq = set(), []
+    for p in out:
+        key = (p.perf, p.cost)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(p)
+    return uniq
+
+
+def pareto_front_min_min(points: Sequence[DesignPoint]) -> List[DesignPoint]:
+    """Pareto-optimal subset, both metrics minimized, sorted by perf."""
+    return sorted(_front(points, dominates_min_min), key=lambda p: (p.perf, p.cost))
+
+
+def pareto_front_max_min(points: Sequence[DesignPoint]) -> List[DesignPoint]:
+    """Pareto-optimal subset for (throughput up, cost down), sorted by perf."""
+    return sorted(_front(points, dominates_max_min), key=lambda p: (p.perf, p.cost))
+
+
+def span(values: Iterable[float]) -> float:
+    """max/min ratio (the paper's lambda_span / alpha_span, Table 1)."""
+    vals = [v for v in values]
+    if not vals:
+        return 1.0
+    lo, hi = min(vals), max(vals)
+    if lo <= 0:
+        return float("inf")
+    return hi / lo
+
+
+def check_delta_curve(points: Sequence[DesignPoint], delta: float) -> bool:
+    """Problem 1 condition (i): consecutive Pareto points d, d' must satisfy
+    max(d'_alpha/d_alpha - 1, d'_theta/d_theta - 1) < delta."""
+    front = pareto_front_max_min(points)
+    for d, d2 in zip(front, front[1:]):
+        if d.perf <= 0 or d.cost <= 0:
+            return False
+        gap = max(d2.cost / d.cost - 1.0, d2.perf / d.perf - 1.0)
+        if gap >= delta + 1e-12:
+            return False
+    return True

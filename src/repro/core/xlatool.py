@@ -1,0 +1,118 @@
+"""XLATool: the COSMOS SynthesisTool over the TPU cost oracle.
+
+Closes the loop between the paper's engine (characterize -> LP -> map)
+and the TPU fleet: a *component* is one stage of a multi-model ML system
+(actor/learner fleets, draft/target serving, teacher/student pipelines),
+and the knobs map onto the paper's exactly:
+
+    ports   -> the stage's FLEET SHARE: chips = 64 * 2^(ports-1)
+               (pow-2, the paper's port rule) — resource replication:
+               more chips => lower effective latency, more total HBM
+               claimed (the paper's area);
+    unrolls -> inverse microbatching: microbatches = 2^(max-unrolls),
+               so higher unrolls => fewer weight re-reads => faster but
+               more HBM per chip — the Amdahl-shaped lambda(u) the
+               mapping function phi assumes.
+
+One "synthesis" prices the configuration with the calibrated analytic
+model from ``core.autotune`` (validated against ``memory_analysis()`` in
+§Perf): lambda = roofline step time, alpha = total HBM bytes claimed
+across the stage's chips.  ``repro.launch.dryrun --auto`` is the single
+confirming compile per mapped point — the paper's invocation-frugality
+discipline applied to XLA.  The system-level LP then allocates fleet
+shares across stages to hit a target pipeline throughput at minimum
+total HBM.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+from ..configs.base import ModelConfig, ShapeSpec
+from .autotune import HBM_BYTES_PER_CHIP, price_train_step
+from .knobs import CDFGFacts, Synthesis
+
+__all__ = ["XLATool", "BASE_CHIPS", "MAX_UNROLL"]
+
+BASE_CHIPS = 64          # ports=1 fleet share
+MAX_UNROLL = 6           # unrolls=6 -> microbatches=1
+_PEAK = 197e12
+_HBM_BW = 819e9
+_ICI_BW = 50e9
+
+
+class XLATool:
+    """SynthesisTool whose components are (ModelConfig, ShapeSpec) stages."""
+
+    def __init__(self, components: Dict[str, tuple], *, tp: int = 16,
+                 hbm_budget: int = HBM_BYTES_PER_CHIP):
+        self.components = dict(components)
+        self.tp = tp
+        self.hbm_budget = hbm_budget
+
+    def _chips(self, ports: int) -> int:
+        return BASE_CHIPS * (1 << max(0, ports - 1))
+
+    def _microbatches(self, unrolls: int) -> int:
+        return 1 << max(0, MAX_UNROLL - unrolls)
+
+    def _lambda(self, cfg: ModelConfig, shape: ShapeSpec, chips: int,
+                mesh: Dict[str, int], microbatches: int, plan) -> float:
+        """Roofline step time (s) for this stage at this fleet share."""
+        tp, dp = mesh["model"], mesh["data"]
+        tokens = shape.global_batch * shape.seq_len
+        n_act = cfg.active_param_count()
+        flops_dev = 8.0 * n_act * tokens / chips      # 6ND + remat re-fwd
+        t_comp = flops_dev / _PEAK
+        w_dev = 2.0 * n_act / tp
+        bytes_dev = (3.0 * w_dev * microbatches       # weight re-reads
+                     + 4.0 * plan.breakdown["residuals"]
+                     + 3.0 * plan.breakdown["opt"]
+                     + 2.0 * plan.breakdown["transient"])
+        t_mem = bytes_dev / _HBM_BW
+        b_loc = max(1.0, shape.global_batch / dp) / microbatches
+        act = b_loc * shape.seq_len * cfg.d_model * 2.0
+        layers = max(cfg.n_layers, 1)
+        coll = (2 * layers * microbatches * 3 * act * 2 * (tp - 1) / max(tp, 1)
+                + 4.0 * n_act / tp * 2 * (dp - 1) / max(dp, 1))
+        t_coll = coll / _ICI_BW
+        return max(t_comp, t_mem, t_coll)
+
+    # ------------------------------------------------------------------
+    # SynthesisTool protocol
+    # ------------------------------------------------------------------
+    def synthesize(self, component: str, *, unrolls: int, ports: int,
+                   max_states: Optional[int] = None) -> Synthesis:
+        cfg, shape = self.components[component]
+        chips = self._chips(ports)
+        microbatches = self._microbatches(unrolls)
+        mesh = {"data": max(1, chips // self.tp), "model": self.tp}
+        if shape.global_batch % mesh["data"] != 0 and \
+                mesh["data"] % shape.global_batch != 0:
+            return Synthesis(lam=float("inf"), area=float("inf"),
+                             ports=ports, unrolls=unrolls, feasible=False)
+        plan = price_train_step(cfg, shape, mesh, microbatches=microbatches,
+                                remat="full")
+        lam = self._lambda(cfg, shape, chips, mesh, microbatches, plan)
+        area = float(plan.est_bytes) * chips          # total HBM claimed
+        states = microbatches
+        # lambda-constraint analogue: a configuration whose per-chip HBM
+        # exceeds the physical budget fails synthesis (cannot be built),
+        # exactly like a schedule that does not fit max_states.
+        feasible = plan.est_bytes <= self.hbm_budget
+        if not feasible:
+            return Synthesis(lam=float("inf"), area=float("inf"),
+                             ports=ports, unrolls=unrolls,
+                             states_per_iter=states, feasible=False)
+        return Synthesis(lam=lam, area=area, ports=ports, unrolls=unrolls,
+                         states_per_iter=states, feasible=True,
+                         detail={"chips": float(chips),
+                                 "microbatches": float(microbatches),
+                                 "gb_per_chip": plan.est_bytes / 1e9})
+
+    def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts:
+        cfg, shape = self.components[component]
+        return CDFGFacts(gamma_r=1, gamma_w=1,
+                         eta=max(1, synth.states_per_iter),
+                         trip=shape.global_batch, has_plm_access=False)

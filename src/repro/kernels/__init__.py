@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (jitted wrapper with an XLA fallback) and <name>/ref.py
+(pure-jnp oracle).  Validated with interpret=True on CPU; the dry-run
+lowers the XLA path (DESIGN.md Section 6).
+"""

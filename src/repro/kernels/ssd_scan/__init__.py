@@ -1,0 +1,5 @@
+from .kernel import ssd_scan
+from .ops import ssd, ssd_oracle
+from .ref import ssd_ref
+
+__all__ = ["ssd_scan", "ssd", "ssd_oracle", "ssd_ref"]

@@ -1,0 +1,111 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD "state-space duality" insight: within a chunk
+of Q tokens the recurrence is a (Q x Q) masked-decay attention — an MXU
+matmul — and across chunks only the (P x N) state is carried.  The carry
+lives in VMEM scratch across a SEQUENTIAL chunk grid dimension, so the
+kernel streams x/dt/B/C chunk tiles HBM->VMEM exactly once and never
+materializes the (S x S) dual form.
+
+Grid: (Bz, H, n_chunks), last dimension "arbitrary" (sequential).
+Block shapes: x (1,1,Q,P), dt (1,1,Q), B/C (1,Q,N) shared across heads,
+outputs y (1,1,Q,P) and the final state (1,1,P,N) written on the last
+chunk.  Q and N default to 128 (lane-width aligned); P is the head dim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_scr, *,
+            chunk: int, n_chunks: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (Q,)
+    A = a_ref[0]                               # ()
+    Bm = b_ref[0].astype(jnp.float32)          # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    a = dt * A                                 # (Q,) log-decay steps
+    cum = jnp.cumsum(a)                        # within-chunk cumulative
+
+    # intra-chunk dual form: scores (Q, Q) = (C_i . B_j) * L_ij * dt_j
+    s = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Q, Q)
+    diff = cum[:, None] - cum[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # mask before exp (masked diffs are positive and would overflow)
+    L = jnp.exp(jnp.where(row >= col, diff, -1e30))
+    w = s * L * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())))     # (Q, P)
+
+    # inter-chunk: y += C_i . (exp(cum_i) * h_in)
+    h = h_scr[...]                                               # (P, N)
+    y_inter = jax.lax.dot_general(Cm, h, (((1,), (1,)), ((), ())))  # (Q, P)
+    y = y + y_inter * jnp.exp(cum)[:, None]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: h' = exp(sum a) * h + sum_j exp(cum_Q - cum_j) dt_j x_j B_j^T
+    total = cum[-1]
+    rem = jnp.exp(total - cum) * dt                              # (Q,)
+    contrib = jax.lax.dot_general(x * rem[:, None], Bm,
+                                  (((0,), (0,)), ((), ())))      # (P, N)
+    h_scr[...] = jnp.exp(total) * h + contrib
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _finish():
+        hout_ref[0, 0] = h_scr[...]
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
+    """x: (Bz,S,H,P); dt: (Bz,S,H); A: (H,); B, C: (Bz,S,N).
+
+    Returns (y (Bz,S,H,P), h_final (Bz,H,P,N)).  S % chunk == 0.
+    """
+    Bz, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    xt = x.transpose(0, 2, 1, 3)               # (Bz,H,S,P)
+    dtt = dt.transpose(0, 2, 1)                # (Bz,H,S)
+
+    kern = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h_fin = pl.pallas_call(
+        kern,
+        grid=(Bz, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bz, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((Bz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xt, dtt, A.astype(jnp.float32), B, C)
+    return y.transpose(0, 2, 1, 3), h_fin

@@ -1,0 +1,6 @@
+from .kernel import gradient_kernel, grid_steps, vmem_bytes
+from .ops import gradient, gradient_oracle
+from .ref import gradient_ref
+
+__all__ = ["gradient_kernel", "gradient", "gradient_oracle", "gradient_ref",
+           "vmem_bytes", "grid_steps"]

@@ -1,0 +1,74 @@
+"""WAMI gradient as a Pallas kernel with COSMOS-knob-driven BlockSpecs.
+
+This is the paper's port/unroll knob pair made physical on TPU
+(DESIGN.md §2):
+
+  * ``ports``   -> number of column banks: the W axis is split into
+    ``ports`` lane-blocks processed by parallel grid columns — the
+    multi-bank PLM that Mnemosyne would generate, here as VMEM tiles;
+  * ``unrolls`` -> rows computed per grid step (``block_h``): the loop
+    body replication, trading VMEM footprint for fewer grid iterations.
+
+The halo problem (vertical neighbours across block boundaries) is solved
+the TPU way: the ops wrapper materializes the four shifted views with
+XLA slices and the kernel consumes aligned blocks — no shared-memory
+halo exchange to port from the GPU idiom.
+
+The COSMOS characterization of this kernel (ports x unrolls ->
+VMEM bytes x grid steps) is exercised in benchmarks/fig4_motivational.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gradient_kernel", "vmem_bytes", "grid_steps"]
+
+
+def _kernel(left_ref, right_ref, up_ref, down_ref, gx_ref, gy_ref):
+    gx_ref[...] = (right_ref[...] - left_ref[...]) * 0.5
+    gy_ref[...] = (down_ref[...] - up_ref[...]) * 0.5
+
+
+def gradient_kernel(gray: jnp.ndarray, *, ports: int = 1, unrolls: int = 8,
+                    interpret: bool = False):
+    """Central-difference gradient.  gray: (H, W) with W % ports == 0 and
+    H % unrolls == 0.  Returns (gx, gy)."""
+    H, W = gray.shape
+    assert W % ports == 0 and H % unrolls == 0
+    bw = W // ports
+    bh = unrolls
+    p = jnp.pad(gray, 1, mode="edge")
+    left = p[1:-1, :-2]
+    right = p[1:-1, 2:]
+    up = p[:-2, 1:-1]
+    down = p[2:, 1:-1]
+
+    spec = pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+    gx, gy = pl.pallas_call(
+        _kernel,
+        grid=(H // bh, ports),
+        in_specs=[spec] * 4,
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((H, W), gray.dtype)] * 2,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(left, right, up, down)
+    return gx, gy
+
+
+def vmem_bytes(H: int, W: int, *, ports: int, unrolls: int,
+               dtype_bytes: int = 4) -> int:
+    """VMEM working set per grid step (4 in + 2 out blocks)."""
+    return 6 * unrolls * (W // ports) * dtype_bytes
+
+
+def grid_steps(H: int, W: int, *, ports: int, unrolls: int) -> int:
+    """Sequential steps if one core walks the grid (latency model input)."""
+    return (H // unrolls) * ports

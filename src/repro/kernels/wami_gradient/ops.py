@@ -1,0 +1,25 @@
+"""Jitted wrapper for the WAMI gradient kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import gradient_kernel, grid_steps, vmem_bytes
+from .ref import gradient_ref
+
+__all__ = ["gradient", "gradient_oracle", "vmem_bytes", "grid_steps"]
+
+
+@functools.partial(jax.jit, static_argnames=("ports", "unrolls",
+                                             "use_pallas", "interpret"))
+def gradient(gray, *, ports=1, unrolls=8, use_pallas=True, interpret=False):
+    if use_pallas:
+        return gradient_kernel(gray, ports=ports, unrolls=unrolls,
+                               interpret=interpret)
+    return gradient_ref(gray)
+
+
+def gradient_oracle(gray):
+    return gradient_ref(gray)

@@ -1,0 +1,14 @@
+"""Oracle: the WAMI gradient component (same math as apps.wami)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gradient_ref"]
+
+
+def gradient_ref(gray: jnp.ndarray):
+    p = jnp.pad(gray, 1, mode="edge")
+    gx = (p[1:-1, 2:] - p[1:-1, :-2]) * 0.5
+    gy = (p[2:, 1:-1] - p[:-2, 1:-1]) * 0.5
+    return gx, gy

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, the sharded step function
+(train / prefill / decode per the shape kind), lowers it against
+ShapeDtypeStruct inputs (no allocation), compiles, and records:
+
+  * ``memory_analysis()``  — bytes per device (does the cell fit?)
+  * ``cost_analysis()``    — HLO FLOPs / bytes for §Roofline
+  * collective bytes       — parsed from the optimized HLO
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``;
+benchmarks and EXPERIMENTS.md read them from there.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config, get_shape, list_archs
+from ..core.autotune import choose_train_knobs
+from ..dist.sharding import (batch_spec, cache_spec, lm_rules, mesh_context,
+                             residual_sharding, zero1_spec)
+from ..models import (build_model, decode_specs, params_specs, prefill_specs,
+                      train_batch_specs)
+from ..optim import AdamWConfig, OptState, init_opt, init_opt_q8
+from ..train import TrainStepConfig, make_train_step
+from .hlo_analysis import analyze_hlo, parse_collectives, roofline_terms
+from .mesh import make_production_mesh
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+
+def _opt_state_specs(pspecs):
+    zeros = jax.eval_shape(init_opt, pspecs)
+    return zeros
+
+
+def _shardings_for(tree_specs, rules, mesh):
+    return rules.tree(tree_specs, mesh)
+
+
+def _opt_shardings(opt_specs: OptState, param_sh, mesh):
+    def leaf(sh, spec):
+        return zero1_spec(sh, tuple(spec.shape), mesh)
+    mu = jax.tree.map(leaf, param_sh, opt_specs.mu)
+    nu = jax.tree.map(leaf, param_sh, opt_specs.nu)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return OptState(step=NamedSharding(mesh, P()), mu=mu, nu=nu)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             microbatches: int = 1, remat: str = "full",
+             accum_dtype: str = "float32", auto: bool = False,
+             q8_moments: bool = False, seq_parallel: bool = False,
+             out_dir: Optional[str] = None, verbose: bool = True,
+             extra_tag: str = "") -> Dict[str, Any]:
+    """Lower+compile one cell; returns (and persists) the record."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_shape = ({"pod": 2, "data": 16, "model": 16}
+                  if mesh_kind == "multipod" else {"data": 16, "model": 16})
+    plan = None
+    if auto and shape.kind == "train":
+        plan = choose_train_knobs(cfg, shape, mesh_shape)
+        microbatches, remat = plan.microbatches, plan.remat
+        accum_dtype = plan.accum_dtype
+    ok, why = shape.applicable(cfg)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "microbatches": microbatches, "remat": remat,
+        "accum_dtype": accum_dtype, "q8_moments": q8_moments,
+        "seq_parallel": seq_parallel,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    if plan is not None:
+        record["planned_bytes"] = plan.est_bytes
+        record["plan_breakdown"] = {k: round(v / 1e9, 3)
+                                    for k, v in plan.breakdown.items()}
+    if not ok:
+        record["status"] = "skip"
+        record["skip_reason"] = why
+        _persist(record, out_dir, extra_tag)
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    model = build_model(cfg)
+    rules = lm_rules(cfg.family,
+                     two_d_experts=(cfg.family == "moe"
+                                    and cfg.param_count() > 2e11))
+    t0 = time.time()
+    import contextlib
+    res_ctx = (residual_sharding(("data", "model", None)) if seq_parallel
+               else contextlib.nullcontext())
+    try:
+        with mesh_context(mesh), res_ctx:
+            if shape.kind == "train":
+                pspecs = params_specs(cfg)
+                ospecs = (jax.eval_shape(init_opt_q8, pspecs) if q8_moments
+                          else _opt_state_specs(pspecs))
+                bspecs = train_batch_specs(cfg, shape)
+                p_sh = _shardings_for(pspecs, rules, mesh)
+                o_sh = (_q8_opt_shardings(ospecs, p_sh, mesh) if q8_moments
+                        else _opt_shardings(ospecs, p_sh, mesh))
+                b_sh = batch_spec(bspecs, mesh)
+                step = make_train_step(
+                    model, AdamWConfig(),
+                    TrainStepConfig(microbatches=microbatches, remat=remat,
+                                    accum_dtype=accum_dtype,
+                                    quantized_moments=q8_moments))
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                rep = NamedSharding(mesh, P())
+                out_specs = jax.eval_shape(step, pspecs, ospecs, bspecs)
+                metric_sh = jax.tree.map(lambda _: rep, out_specs[2])
+                jitted = jax.jit(step,
+                                 in_shardings=(p_sh, o_sh, b_sh),
+                                 out_shardings=(p_sh, o_sh, metric_sh),
+                                 donate_argnums=(0, 1))
+                lowered = jitted.lower(pspecs, ospecs, bspecs)
+            elif shape.kind == "prefill":
+                pspecs = params_specs(cfg)
+                bspecs = prefill_specs(cfg, shape)
+                p_sh = _shardings_for(pspecs, rules, mesh)
+                b_sh = batch_spec(bspecs, mesh)
+
+                def prefill(params, batch):
+                    return model.prefill(params, batch)
+
+                jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+                lowered = jitted.lower(pspecs, bspecs)
+            else:  # decode
+                pspecs = params_specs(cfg)
+                tok_specs, cache_specs_ = decode_specs(cfg, shape)
+                p_sh = _shardings_for(pspecs, rules, mesh)
+                c_sh = cache_spec(cache_specs_, mesh,
+                                  seq_shard=(shape.global_batch == 1))
+                b_sh = batch_spec({"tokens": tok_specs}, mesh)["tokens"]
+
+                def decode(params, tokens, cache):
+                    return model.decode_step(params, tokens, cache)
+
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                logits_sh = NamedSharding(
+                    mesh, P(("pod", "data") if mesh_kind == "multipod"
+                            else "data")
+                    if shape.global_batch % mesh.shape.get("data", 1) == 0
+                    and shape.global_batch > 1 else P())
+                jitted = jax.jit(decode, in_shardings=(p_sh, b_sh, c_sh),
+                                 out_shardings=(logits_sh, c_sh),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(pspecs, tok_specs, cache_specs_)
+
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        if os.environ.get("REPRO_SAVE_HLO"):
+            import gzip
+            hdir = os.path.join(out_dir or ARTIFACTS, "hlo")
+            os.makedirs(hdir, exist_ok=True)
+            tag2 = f"__{extra_tag}" if extra_tag else ""
+            with gzip.open(os.path.join(
+                    hdir, f"{arch}__{shape_name}__{mesh_kind}{tag2}.hlo.gz"),
+                    "wt") as zf:
+                zf.write(hlo)
+        # trip-count-aware analysis (XLA cost_analysis counts while bodies
+        # once — see hlo_analysis.analyze_hlo)
+        mc = analyze_hlo(hlo)
+        coll = mc.collectives
+
+        n_dev = mesh.size
+        flops_dev = float(mc.flops)
+        bytes_dev = float(mc.bytes)
+        terms = roofline_terms(flops_per_device=flops_dev,
+                               bytes_per_device=bytes_dev,
+                               collective_bytes=coll.modeled_bytes)
+
+        record.update({
+            "status": "ok",
+            "devices": n_dev,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+            },
+            "cost": {"flops_per_device": flops_dev,
+                     "bytes_per_device": bytes_dev,
+                     "xla_cost_flops_raw": float(cost.get("flops", 0.0)),
+                     "xla_cost_bytes_raw": float(
+                         cost.get("bytes accessed", 0.0))},
+            "collectives": {
+                "modeled_bytes_per_device": coll.modeled_bytes,
+                "raw_result_bytes": coll.raw_result_bytes,
+                "per_op": coll.per_op,
+                "per_op_count": coll.per_op_count,
+            },
+            "roofline": terms,
+        })
+        if verbose:
+            mb = record["memory"]
+            print(f"[ok] {arch} x {shape_name} x {mesh_kind} "
+                  f"({n_dev} dev): compile {t_compile:.1f}s, "
+                  f"args {mb['argument_bytes']/1e9:.2f} GB/dev, "
+                  f"temp {mb['temp_bytes']/1e9:.2f} GB/dev, "
+                  f"bound={terms['bound']}")
+    except Exception as e:  # noqa: BLE001 - record the failure, keep going
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[ERR] {arch} x {shape_name} x {mesh_kind}: "
+                  f"{record['error'][:200]}")
+    _persist(record, out_dir, extra_tag)
+    return record
+
+
+def _q8_opt_shardings(ospecs, p_sh, mesh):
+    """Quantized moments inherit the parameter sharding (int8 tensors are
+    param-shaped); row scales drop the trailing dim of the spec."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def q_leaf(sh, _):
+        return sh
+
+    def s_leaf(sh, x):
+        spec = list(sh.spec)[: max(0, len(x.shape))]
+        return NamedSharding(mesh, P(*spec))
+
+    mu_q = jax.tree.map(q_leaf, p_sh, ospecs.mu_q)
+    mu_s = jax.tree.map(s_leaf, p_sh, ospecs.mu_s)
+    nu_q = jax.tree.map(q_leaf, p_sh, ospecs.nu_q)
+    nu_s = jax.tree.map(s_leaf, p_sh, ospecs.nu_s)
+    from ..optim import QuantOptState
+    return QuantOptState(step=NamedSharding(mesh, P()), mu_q=mu_q, mu_s=mu_s,
+                         nu_q=nu_q, nu_s=nu_s)
+
+
+def _persist(record: Dict[str, Any], out_dir: Optional[str], tag: str = ""):
+    out_dir = out_dir or ARTIFACTS
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fn = (f"{record['arch']}__{record['shape']}__{record['mesh']}"
+          f"{suffix}.json")
+    with open(os.path.join(out_dir, fn), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--auto", action="store_true",
+                    help="pick microbatches/remat via core.autotune")
+    ap.add_argument("--q8-moments", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--accum-dtype", default="float32")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.all or not args.shape \
+        else [args.shape]
+
+    n_ok = n_skip = n_err = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                if args.skip_existing:
+                    fn = os.path.join(args.out or ARTIFACTS,
+                                      f"{arch}__{shape}__{mesh_kind}.json")
+                    if os.path.exists(fn):
+                        with open(fn) as f:
+                            if json.load(f).get("status") == "ok":
+                                continue
+                rec = run_cell(arch, shape, mesh_kind,
+                               microbatches=args.microbatches,
+                               remat=args.remat, auto=args.auto,
+                               accum_dtype=args.accum_dtype,
+                               q8_moments=args.q8_moments,
+                               seq_parallel=args.seq_parallel,
+                               out_dir=args.out,
+                               extra_tag=args.tag)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skip"
+                n_err += st == "error"
+    print(f"dry-run complete: {n_ok} ok, {n_skip} skip, {n_err} error")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,343 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` has no collective accounting, so collective traffic
+is parsed from the optimized (post-SPMD-partitioning) HLO text of the
+compiled executable, where shapes are already per-device.  Bytes moved
+per device are modeled with ring factors:
+
+    all-reduce        2 (N-1)/N x result bytes   (reduce-scatter + all-gather)
+    all-gather          (N-1)/N x result bytes
+    reduce-scatter      (N-1)   x result bytes   (operand = N x result)
+    all-to-all          (N-1)/N x result bytes
+    collective-permute        1 x result bytes
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "CollectiveStats",
+           "parse_collectives", "roofline_terms", "dtype_bytes"]
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per-device budget)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def dtype_bytes(dt: str) -> int:
+    return _DTYPE_BYTES.get(dt, 4)
+
+
+@dataclass
+class CollectiveStats:
+    per_op: Dict[str, float] = field(default_factory=dict)   # modeled bytes
+    per_op_count: Dict[str, int] = field(default_factory=dict)
+    raw_result_bytes: float = 0.0
+    modeled_bytes: float = 0.0                                 # per device
+
+    def add(self, kind: str, bytes_: float, n: int):
+        if kind == "all-reduce":
+            moved = 2.0 * (n - 1) / max(n, 1) * bytes_
+        elif kind == "all-gather":
+            moved = (n - 1) / max(n, 1) * bytes_
+        elif kind == "reduce-scatter":
+            moved = (n - 1) * bytes_
+        elif kind == "all-to-all":
+            moved = (n - 1) / max(n, 1) * bytes_
+        else:                               # collective-permute
+            moved = bytes_
+        self.per_op[kind] = self.per_op.get(kind, 0.0) + moved
+        self.per_op_count[kind] = self.per_op_count.get(kind, 0) + 1
+        self.raw_result_bytes += bytes_
+        self.modeled_bytes += moved
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum collective traffic from optimized per-device HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dt not in _DTYPE_BYTES and not dt[0] in "sfub":
+            continue
+        size = dtype_bytes(dt)
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        n = 2
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                n = int(gi.group(2))
+        stats.add(kind, float(size), n)
+    return stats
+
+
+# ----------------------------------------------------------------------
+# Trip-count-aware module analysis
+# ----------------------------------------------------------------------
+# XLA's cost_analysis() counts while-loop bodies ONCE (verified: a
+# 10-iteration scan of matmuls reports 1/10th of the unrolled flops), so
+# scanned-layer models would under-report flops/bytes/collectives by
+# O(layers x microbatches).  The optimized HLO text annotates every while
+# with backend_config known_trip_count; this analyzer propagates those
+# multipliers down the call tree and accumulates:
+#   * flops  — from dot ops (2 * prod(result) * K per contracted dim);
+#   * bytes  — operand + output sizes of scheduled instructions
+#              (fusion callers, dots, copies — the HBM traffic proxy);
+#   * collectives — ring-model bytes as in parse_collectives.
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*\(?\s*([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[\d,]*\][^\s]*)\s+([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_WHILE_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_COND_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NO_TRAFFIC = {"tuple", "get-tuple-element", "parameter", "constant",
+               "bitcast", "after-all", "add-dependency", "while",
+               "conditional", "call", "optimization-barrier"}
+
+
+@dataclass
+class ModuleCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: "CollectiveStats" = None  # type: ignore
+
+
+def _shape_size(dtype: str, dims: str) -> Tuple[int, List[int]]:
+    size = dtype_bytes(dtype)
+    dl = [int(d) for d in dims.split(",") if d] if dims else []
+    n = 1
+    for d in dl:
+        n *= d
+    return size * n, dl
+
+
+def analyze_hlo(text: str) -> ModuleCost:
+    """Trip-count-corrected per-device cost of an optimized HLO module."""
+    # ---- pass 1: split computations, build symbol table -----------------
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    shapes: Dict[str, Tuple[str, str]] = {}     # instr -> (dtype, dims)
+    for line in text.splitlines():
+        m = _COMP_HEADER_RE.match(line.strip()) if not line.startswith(" ") \
+            else None
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None and line.strip():
+            comps[cur].append(line)
+            mi = _INSTR_RE.match(line)
+            if mi:
+                shapes[mi.group(1)] = (mi.group(2), mi.group(3))
+
+    # ---- pass 2: call graph with multipliers -----------------------------
+    mult: Dict[str, float] = {}
+
+    def visit(comp: str, m: float):
+        if comp not in comps:
+            return
+        mult[comp] = max(mult.get(comp, 0.0), m)
+        for line in comps[comp]:
+            om = _OP_RE.search(line)
+            op = om.group(1) if om else ""
+            if op == "while":
+                tm = _TRIP_RE.search(line)
+                trips = float(tm.group(1)) if tm else 1.0
+                bm = _WHILE_BODY_RE.search(line)
+                if bm:
+                    visit(bm.group(1), m * trips)
+            elif op == "conditional":
+                bm = _COND_BRANCHES_RE.search(line)
+                if bm:
+                    for b in _OPERAND_RE.findall(bm.group(1)):
+                        visit(b, m)
+            else:
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    visit(cm.group(1), m)
+
+    if entry is None:
+        return ModuleCost(collectives=CollectiveStats())
+    visit(entry, 1.0)
+
+    # ---- pass 2b: fusion param traffic overrides -------------------------
+    # A dynamic-slice fused into its consumer makes the fusion's operand
+    # the FULL stacked array (e.g. the (L, d, ff) scan-invariant weight
+    # stack) while the hardware only reads one slice per iteration.  For
+    # each fused computation, map param -> touched bytes when the param
+    # is consumed exclusively by slicing ops.
+    _SLICERS = {"dynamic-slice", "slice", "gather"}
+    fusion_param_bytes: Dict[str, Dict[int, float]] = {}
+    _PARAM_HDR_RE = re.compile(r"\(([^)]*)\)\s*->")
+    for comp, lines in comps.items():
+        # param order from the instruction stream: parameters are declared
+        # as '%name = type[] parameter(N)'
+        param_index: Dict[str, int] = {}
+        uses: Dict[str, List[Tuple[str, float]]] = {}
+        for line in lines:
+            mi = _INSTR_RE.match(line)
+            om = _OP_RE.search(line)
+            if not mi or not om:
+                continue
+            name, op = mi.group(1), om.group(1)
+            if op == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", line)
+                if pm:
+                    param_index[name] = int(pm.group(1))
+                continue
+            out_b, _ = _shape_size(mi.group(2), mi.group(3))
+            try:
+                inner = line.split(op + "(", 1)[1].split(")", 1)[0]
+                for onm in _OPERAND_RE.findall(inner):
+                    uses.setdefault(onm, []).append((op, out_b))
+            except IndexError:
+                continue
+        overrides: Dict[int, float] = {}
+        for pname, idx in param_index.items():
+            us = uses.get(pname, [])
+            if us and all(op in _SLICERS for op, _ in us):
+                overrides[idx] = sum(b for _, b in us)
+        if overrides:
+            fusion_param_bytes[comp] = overrides
+
+    # ---- pass 3: accumulate costs ----------------------------------------
+    cost = ModuleCost(collectives=CollectiveStats())
+    _COLL_OPS = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                 "collective-permute"}
+    for comp, lines in comps.items():
+        m = mult.get(comp)
+        if m is None:
+            continue                       # unreachable helper
+        scheduled = not comp.startswith(("wrapped_", "fused"))
+        for line in lines:
+            mi = _INSTR_RE.match(line)
+            om = _OP_RE.search(line)
+            if not mi or not om:
+                continue
+            dtype, dims = mi.group(2), mi.group(3)
+            op = om.group(1)
+            out_bytes, out_dims = _shape_size(dtype, dims)
+
+            if op == "dot":
+                k = 1
+                cm = _CONTRACT_RE.search(line)
+                opnds = _OPERAND_RE.findall(
+                    line.split("dot(")[1].split(")")[0])
+                if cm and opnds and opnds[0] in shapes:
+                    _, ldims = _shape_size(*shapes[opnds[0]])
+                    for ci in (int(c) for c in cm.group(1).split(",") if c):
+                        if ci < len(ldims):
+                            k *= ldims[ci]
+                n_out = 1
+                for d in out_dims:
+                    n_out *= d
+                cost.flops += m * 2.0 * n_out * k
+            elif op.replace("-start", "") in _COLL_OPS:
+                n = 2
+                g = _GROUPS_RE.search(line)
+                if g:
+                    n = len(g.group(1).split(","))
+                else:
+                    gi = _GROUPS_IOTA_RE.search(line)
+                    if gi:
+                        n = int(gi.group(2))
+                kind = op.replace("-start", "")
+                base = CollectiveStats()
+                base.add(kind, float(out_bytes), n)
+                cost.collectives.per_op[kind] = (
+                    cost.collectives.per_op.get(kind, 0.0)
+                    + base.modeled_bytes * m)
+                cost.collectives.per_op_count[kind] = (
+                    cost.collectives.per_op_count.get(kind, 0) + int(m))
+                cost.collectives.raw_result_bytes += out_bytes * m
+                cost.collectives.modeled_bytes += base.modeled_bytes * m
+
+            # HBM traffic proxy: operand + output bytes of scheduled ops,
+            # with slicing ops counted at their TOUCHED size (a
+            # dynamic-slice of the (L, ...) stacked-params tree reads one
+            # layer's slice, not the whole stack — counting full operands
+            # overstated gemma2 train traffic ~25x).
+            if scheduled and op not in _NO_TRAFFIC:
+                opnd_sizes = []
+                try:
+                    inner = line.split(op + "(", 1)[1].split(")", 1)[0]
+                    for onm in _OPERAND_RE.findall(inner):
+                        if onm in shapes:
+                            opnd_sizes.append(_shape_size(*shapes[onm])[0])
+                except IndexError:
+                    pass
+                if op in ("dynamic-slice", "gather", "slice"):
+                    traffic = 2.0 * out_bytes          # read + write slice
+                elif op == "dynamic-update-slice":
+                    upd = opnd_sizes[1] if len(opnd_sizes) > 1 else out_bytes
+                    traffic = 2.0 * upd                # read + write update
+                elif op in ("scatter", "select-and-scatter"):
+                    upd = opnd_sizes[-1] if opnd_sizes else out_bytes
+                    traffic = 2.0 * upd + (opnd_sizes[1]
+                                           if len(opnd_sizes) > 2 else 0)
+                elif op == "fusion":
+                    cm = _CALLS_RE.search(line)
+                    ov = fusion_param_bytes.get(cm.group(1), {}) if cm else {}
+                    traffic = out_bytes
+                    for i, ob in enumerate(opnd_sizes):
+                        traffic += min(ov.get(i, ob), ob)
+                else:
+                    traffic = out_bytes + sum(opnd_sizes)
+                cost.bytes += m * traffic
+    return cost
+
+
+def roofline_terms(*, flops_per_device: float, bytes_per_device: float,
+                   collective_bytes: float) -> Dict[str, float]:
+    """The three §Roofline terms, in seconds (per device = per step)."""
+    t_compute = flops_per_device / PEAK_FLOPS
+    t_memory = bytes_per_device / HBM_BW
+    t_collective = collective_bytes / ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_collective), key=lambda kv: kv[1])
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "bound": dominant[0],
+        "t_bound_s": dominant[1],
+    }

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+data-parallel by default (gradient all-reduce crosses the inter-pod
+links), with PP-over-pod available as a §Perf experiment.
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state (the dry-run must set
+``xla_force_host_platform_device_count`` before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "SINGLE_POD_DEVICES", "MULTI_POD_DEVICES"]
+
+SINGLE_POD_DEVICES = 256
+MULTI_POD_DEVICES = 512
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic re-planning, tests)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

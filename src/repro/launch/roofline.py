@@ -1,0 +1,129 @@
+"""Roofline report generator: artifacts/dryrun/*.json -> markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline > artifacts/roofline.md
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the
+dominant bottleneck, MODEL_FLOPS / HLO_FLOPs (useful-compute fraction),
+HBM fit, and a one-line "what would move the dominant term" note.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from ..configs import get_config, get_shape
+from .hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+_MOVES = {
+    "compute": "raise MXU utilization: larger per-device tiles, fewer "
+               "pad/transpose ops, fuse elementwise chains",
+    "memory": "cut HBM traffic: more microbatches / tighter remat, bf16 "
+              "accumulation, fuse attention (flash kernel), avoid "
+              "recompute re-reads",
+    "collective": "cut ICI traffic: sequence-parallel residuals "
+                  "(reduce-scatter instead of all-gather), overlap "
+                  "collectives with compute, gradient compression on the "
+                  "pod axis",
+}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch
+
+
+def ideal_mem_bytes(arch: str, shape_name: str, devices: int,
+                    microbatches: int) -> float:
+    """Analytic minimum HBM traffic per device per step (lower bound):
+    weight reads (x3 per microbatch for fwd/bwd/remat on train; x1 for
+    serving) + activation residual stream + KV/state traffic.  The
+    HLO-derived bytes are an upper bound (CPU fusion boundaries
+    over-materialize vs TPU); truth lies between."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    tp = 16
+    dp = devices // tp
+    n_act = cfg.active_param_count()
+    w_dev = 2.0 * n_act / tp
+    B, S = shape.global_batch, shape.seq_len
+    d, L = cfg.d_model, max(cfg.n_layers, 1)
+    act = L * (B / dp) * S * d * 2.0 * 4   # residual r/w fwd+bwd
+    if shape.kind == "train":
+        opt = 12.0 * cfg.param_count() / (tp * dp)
+        return 3.0 * w_dev * max(1, microbatches) + act + opt
+    if shape.kind == "prefill":
+        return w_dev + act / 2
+    # decode: weights + full cache read
+    hd = cfg.hd() if cfg.n_heads else 0
+    cache = 2.0 * L * B * S * cfg.n_kv_heads * hd * 2.0 / devices
+    return w_dev + cache
+
+
+def load(directory: str = ART):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        if "__" in os.path.basename(f).replace(".json", "")[-6:]:
+            pass
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def render(rows, out=sys.stdout):
+    from .hlo_analysis import HBM_BW
+    w = out.write
+    w("| arch | shape | mesh | compute s | memory s (hi/lo) | "
+      "collective s | bound | useful/HLO | roofline frac (lo–hi) | "
+      "HBM GB | fits |\n")
+    w("|---|---|---|---|---|---|---|---|---|---|---|\n")
+    for r in rows:
+        if r["status"] == "skip":
+            w(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+              f"SKIP | — | — | — | ({r['skip_reason'][:44]}…) |\n")
+            continue
+        if r["status"] != "ok":
+            w(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+              f"ERROR | — | — | — | — |\n")
+            continue
+        ro = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo = r["cost"]["flops_per_device"] * r["devices"]
+        ratio = mf / hlo if hlo else 0.0
+        mem = r["memory"]
+        hbm = (mem["argument_bytes"] + mem["temp_bytes"]
+               + mem["output_bytes"]) / 1e9
+        t_mem_lo = ideal_mem_bytes(r["arch"], r["shape"], r["devices"],
+                                   r.get("microbatches", 1)) / HBM_BW
+        tc = ro["t_compute_s"]
+        hi_bound = max(tc, ro["t_memory_s"], ro["t_collective_s"])
+        lo_bound = max(tc, t_mem_lo, ro["t_collective_s"])
+        frac_lo = tc / hi_bound if hi_bound else 0.0   # pessimistic traffic
+        frac_hi = tc / lo_bound if lo_bound else 0.0   # analytic-min traffic
+        w(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+          f"| {tc:.4f} | {ro['t_memory_s']:.4f}/{t_mem_lo:.4f} "
+          f"| {ro['t_collective_s']:.4f} | **{ro['bound']}** "
+          f"| {ratio:.2f} | {frac_lo:.0%}–{frac_hi:.0%} "
+          f"| {hbm:.1f} | {'Y' if hbm <= 16 else 'N'} |\n")
+    w("\nBottleneck remedies:\n")
+    for k, v in _MOVES.items():
+        w(f"- **{k}**: {v}\n")
+
+
+def main():
+    render(load())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Model zoo: dense/MoE transformers, Mamba2 SSM, Zamba2 hybrid, Whisper
+encoder-decoder, VLM backbone — all pure-functional JAX."""
+
+from .api import (build_model, decode_specs, make_synthetic_batch,
+                  params_specs, prefill_specs, train_batch_specs)
+from .encdec import EncDecLM
+from .hybrid import HybridLM
+from .ssm_lm import MambaLM
+from .transformer import DecoderLM
+
+__all__ = ["build_model", "DecoderLM", "MambaLM", "HybridLM", "EncDecLM",
+           "params_specs", "train_batch_specs", "prefill_specs",
+           "decode_specs", "make_synthetic_batch"]

@@ -1,0 +1,99 @@
+"""Model factory + abstract input specs (the dry-run contract).
+
+``build_model(cfg)`` returns the family implementation; ``*_specs``
+return ShapeDtypeStruct stand-ins for every model input — weak-type
+correct, shardable, no device allocation — which is what
+``launch/dryrun.py`` lowers against.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from .encdec import EncDecLM
+from .hybrid import HybridLM
+from .ssm_lm import MambaLM
+from .transformer import DecoderLM
+
+__all__ = ["build_model", "train_batch_specs", "prefill_specs",
+           "decode_specs", "params_specs", "make_synthetic_batch"]
+
+_SDS = jax.ShapeDtypeStruct
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def params_specs(cfg: ModelConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {
+        "tokens": _SDS((B, S), jnp.int32),
+        "targets": _SDS((B, S), jnp.int32),
+        "mask": _SDS((B, S), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = _SDS((B, cfg.encoder_frames, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+    if cfg.mrope:
+        batch["mrope_positions"] = _SDS((3, B, S), jnp.int32)
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {"tokens": _SDS((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = _SDS((B, cfg.encoder_frames, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+    if cfg.mrope:
+        batch["mrope_positions"] = _SDS((3, B, S), jnp.int32)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Any, Any]:
+    """(tokens, cache) specs for one decode step with a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    tokens = _SDS((B, 1), jnp.int32)
+    return tokens, cache
+
+
+def make_synthetic_batch(cfg: ModelConfig, shape_or_bs, seq=None, key=None):
+    """Concrete random batch (for smoke tests / the example trainers)."""
+    if isinstance(shape_or_bs, ShapeSpec):
+        B, S = shape_or_bs.global_batch, shape_or_bs.seq_len
+    else:
+        B, S = shape_or_bs, seq
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab, jnp.int32),
+        "targets": jax.random.randint(k2, (B, S), 0, cfg.vocab, jnp.int32),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            k3, (B, cfg.encoder_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.mrope:
+        pos = jnp.arange(S, dtype=jnp.int32)[None, None, :]
+        batch["mrope_positions"] = jnp.broadcast_to(pos, (3, B, S))
+    return batch

@@ -1,0 +1,406 @@
+"""Transformer building blocks shared by the model zoo.
+
+Pure-functional JAX: every block is an ``init(key, cfg) -> params`` plus
+an ``apply(params, x, ...) -> y`` pair operating on explicit pytrees, so
+the whole model stays a pytree-in/pytree-out function compatible with
+``jax.lax.scan`` over stacked layer parameters and with pjit sharding by
+parameter path (see ``repro.dist.sharding``).
+
+Covers every attention flavour in the assignment: GQA, RoPE and M-RoPE,
+QKV bias, attention/logit soft-capping, sliding-window masks (with the
+window as a *traced* per-layer scalar so gemma2's local/global
+alternation lives inside one ``lax.scan``), and KV-cache decode.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import constrain, constrain_attn_qkv
+
+__all__ = [
+    "init_norm", "apply_norm", "init_attention", "apply_attention",
+    "init_mlp", "apply_mlp", "init_moe", "apply_moe",
+    "rope", "mrope", "make_positions", "softcap",
+    "attention_core", "Params",
+]
+
+Params = Dict[str, Any]
+
+_INIT_STD = 0.02
+
+
+def _dense_init(key, shape, dtype, std=_INIT_STD):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    if cfg.norm_kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.zeros((d,), dtype)}   # rmsnorm stores (scale - 1)
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(ms + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Rotary embeddings (RoPE and M-RoPE)
+# ----------------------------------------------------------------------
+
+def _rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple:
+    """positions (..., S) -> cos/sin (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply rotary embedding.  x: (B, S, H, hd); positions: (B, S)."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)       # (B, S, hd/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+          sections: Tuple[int, int, int] = (16, 24, 24)) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: three position streams (temporal, height,
+    width) rotate disjoint head-dim sections.  positions3: (3, B, S);
+    ``sections`` are half-dim section sizes (sum = head_dim/2)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    secs = list(sections)
+    if sum(secs) != half:          # scale sections for reduced configs
+        base = half // 3
+        secs = [half - 2 * base, base, base]
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # pick which position stream drives each frequency index
+    stream = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                              for i, s in enumerate(secs)])
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32).transpose(1, 2, 0),   # (B, S, 3)
+        stream[None, None, :].repeat(positions3.shape[1], 0), axis=-1)
+    ang = pos * freq                                          # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def make_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + offset + jnp.zeros(
+        (batch, 1), jnp.int32)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+# ----------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.hd()
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": _dense_init(ks[0], (d, H * hd), dtype),
+        "wk": _dense_init(ks[1], (d, K * hd), dtype),
+        "wv": _dense_init(ks[2], (d, K * hd), dtype),
+        "wo": _dense_init(ks[3], (H * hd, d), dtype, std=_INIT_STD / math.sqrt(2 * max(1, cfg.n_layers))),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    return p
+
+
+def _mask_bias(q_pos: jnp.ndarray, kv_pos: jnp.ndarray, window,
+               causal: bool) -> jnp.ndarray:
+    """Additive mask (B, 1, Sq, Skv) from positions.  ``window`` may be a
+    traced scalar: 0 => global attention."""
+    dist = q_pos[:, :, None] - kv_pos[:, None, :]         # (B, Sq, Skv)
+    ok = jnp.ones_like(dist, dtype=bool)
+    if causal:
+        ok = ok & (dist >= 0)
+    win = jnp.asarray(window)
+    ok = ok & ((win <= 0) | (dist < win))
+    return jnp.where(ok, 0.0, -1e30)[:, None, :, :]
+
+
+def attention_core(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *,
+                   causal: bool = True, window=0, attn_cap: float = 0.0,
+                   kv_chunk: int = 0) -> jnp.ndarray:
+    """Grouped-query attention core.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, K, hd); H a multiple of K.
+    ``kv_chunk`` > 0 switches to the online-softmax streaming form (exact,
+    bounded memory — the pure-XLA analogue of flash attention; the Pallas
+    kernel in ``repro.kernels.flash_attention`` is the TPU version).
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, K, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if not kv_chunk or kv_chunk >= k.shape[1]:
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)
+        s = softcap(s, attn_cap)
+        bias = _mask_bias(q_pos, kv_pos, window, causal)   # (B,1,Sq,Skv)
+        s = s + bias[:, :, None, :, :]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+        return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+    # ---- streaming online-softmax over KV chunks -----------------------
+    Skv = k.shape[1]
+    n_chunks = (Skv + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - Skv
+    kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kvp = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    kc = kf.reshape(B, n_chunks, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = vf.reshape(B, n_chunks, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    pc = kvp.reshape(B, n_chunks, kv_chunk).transpose(1, 0, 2)
+
+    m0 = jnp.full((B, K, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, hd), jnp.float32)
+
+    def step(carry, chunk):
+        m, l, acc = carry
+        kck, vck, pck = chunk
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kck)
+        s = softcap(s, attn_cap)
+        bias = _mask_bias(q_pos, pck, window, causal)      # (B,1,Sq,c)
+        s = s + bias[:, :, None, :, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked chunks (max = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vck)
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]             # (B,K,G,Sq,hd)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return o.astype(q.dtype)
+
+
+def apply_attention(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray, *,
+                    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    kv_positions: Optional[jnp.ndarray] = None,
+                    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    cache_len=None,
+                    causal: bool = True, window=0,
+                    kv_chunk: int = 0,
+                    ) -> Tuple[jnp.ndarray, Optional[Tuple]]:
+    """Full attention block (projections + core + output).
+
+    Modes:
+      * self-attention over x (training / prefill): kv=None, cache=None;
+      * cross-attention: kv = (k_pre, v_pre) precomputed encoder K/V;
+      * cached decode: ``cache=(k_cache, v_cache)`` with ``cache_len``
+        giving the number of valid positions; x is the new token(s).
+    Returns (output, new_cache_or_None).
+    """
+    B, S, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, hd)
+
+    if kv is None:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(B, S, K, hd)
+        v = v.reshape(B, S, K, hd)
+        if cfg.mrope and positions.ndim == 3:
+            q = mrope(q, positions, cfg.rope_theta)
+            k = mrope(k, positions, cfg.rope_theta)
+            pos2d = positions[0]
+        elif cfg.rope_theta > 0 and cfg.family != "encdec":
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            pos2d = positions
+        else:
+            pos2d = positions if positions.ndim == 2 else positions[0]
+    else:
+        k, v = kv
+        pos2d = positions if positions.ndim == 2 else positions[0]
+
+    new_cache = None
+    if cache is not None:
+        k_cache, v_cache = cache
+        Smax = k_cache.shape[1]
+        # insert the new K/V at cache_len (dynamic update slice)
+        start = jnp.asarray(cache_len, jnp.int32)
+        k_cache = lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, start, 0, 0))
+        v_cache = lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, start, 0, 0))
+        new_cache = (k_cache, v_cache)
+        k, v = k_cache, v_cache
+        kv_pos = jnp.arange(Smax, dtype=jnp.int32)[None, :].repeat(B, 0)
+        # positions beyond cache_len + S are invalid -> mask via huge pos
+        valid = kv_pos < (start + S)
+        kv_pos = jnp.where(valid, kv_pos, 2**30)
+    elif kv_positions is not None:
+        kv_pos = kv_positions
+    else:
+        kv_pos = pos2d
+
+    q, k, v = constrain_attn_qkv(q, k, v)
+    o = attention_core(q, k, v, pos2d, kv_pos, causal=causal, window=window,
+                       attn_cap=cfg.attn_softcap, kv_chunk=kv_chunk)
+    out = o.reshape(B, S, H * hd) @ p["wo"]
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    out_std = _INIT_STD / math.sqrt(2 * max(1, cfg.n_layers))
+    if cfg.mlp_kind == "silu_gated":
+        return {"w_gate": _dense_init(ks[0], (d, f), dtype),
+                "w_up": _dense_init(ks[1], (d, f), dtype),
+                "w_down": _dense_init(ks[2], (f, d), dtype, std=out_std)}
+    return {"w_up": _dense_init(ks[0], (d, f), dtype),
+            "w_down": _dense_init(ks[1], (f, d), dtype, std=out_std)}
+
+
+def apply_mlp(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp_kind == "silu_gated":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = x @ p["w_up"]
+    if cfg.mlp_kind == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w_down"]
+
+
+# ----------------------------------------------------------------------
+# Mixture of Experts
+# ----------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.expert_ff()
+    ks = jax.random.split(key, 5)
+    out_std = _INIT_STD / math.sqrt(2 * max(1, cfg.n_layers))
+    p: Params = {
+        "router": _dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": _dense_init(ks[1], (E, d, f), dtype),
+        "w_up": _dense_init(ks[2], (E, d, f), dtype),
+        "w_down": _dense_init(ks[3], (E, f, d), dtype, std=out_std),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_gate": _dense_init(k1, (d, fs), dtype),
+                       "w_up": _dense_init(k2, (d, fs), dtype),
+                       "w_down": _dense_init(k3, (fs, d), dtype, std=out_std)}
+    return p
+
+
+def apply_moe(p: Params, cfg: ModelConfig, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-choice top-k MoE with fixed expert capacity.
+
+    Sort-free static-shape dispatch: each (token, k) slot computes its
+    rank within its expert via argsort; slots past the capacity are
+    dropped (scatter mode='drop').  Expert compute is a batched matmul
+    (E, C, d) x (E, d, f), so EP sharding of the leading E axis is a pure
+    pjit annotation.  Returns (y, aux_loss).
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(math.ceil(T * k * cfg.capacity_factor / E)))
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = lax.top_k(probs, k)                          # (T, k)
+    gate = (gate / jnp.sum(gate, axis=-1, keepdims=True)).astype(x.dtype)
+
+    flat_e = eidx.reshape(-1)                                 # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_sorted = jnp.arange(T * k, dtype=jnp.int32) - start[sorted_e].astype(jnp.int32)
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted)
+
+    token_of_slot = jnp.arange(T * k, dtype=jnp.int32) // k
+    table = jnp.full((E, C), T, jnp.int32)                    # T = sentinel
+    table = table.at[flat_e, pos].set(token_of_slot, mode="drop")
+
+    x_ext = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = x_ext[table]                                          # (E, C, d)
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+         * jnp.einsum("ecd,edf->ecf", xe, p["w_up"]))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])            # (E, C, d)
+
+    # combine: gather each slot's expert output; dropped slots -> 0
+    ye_ext = jnp.concatenate(
+        [ye, jnp.zeros((E, 1, d), ye.dtype)], axis=1)          # (E, C+1, d)
+    safe_pos = jnp.minimum(pos, C)
+    kept = (pos < C)[:, None].astype(ye.dtype)
+    y_slot = ye_ext[flat_e, safe_pos] * kept                   # (T*k, d)
+    y = jnp.sum(y_slot.reshape(T, k, d) * gate[..., None], axis=1)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_up"])) @ sp["w_down"]
+
+    # Switch-style load-balancing auxiliary loss
+    density = jnp.mean(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=(0, 1))
+    router_mean = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * router_mean)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,198 @@
+"""Zamba2-style hybrid LM: Mamba2 backbone + one SHARED attention block.
+
+The shared block (attention + gated MLP, one copy of weights) fires
+before every ``shared_attn_every``-th group of Mamba layers — the 54
+Mamba layers form 9 super-blocks of 6, and the scan runs over
+super-blocks so the weight reuse is structural (one set of attention
+parameters referenced from every scan iteration = a genuinely non-trivial
+TMG transition for COSMOS, DESIGN.md Section 4).
+
+Each invocation site keeps its own KV cache (weights are shared, caches
+are not).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import constrain, constrain_residual
+from ..train.remat import maybe_remat
+from .blocks import (Params, _dense_init, apply_attention, apply_mlp,
+                     apply_norm, init_attention, init_mlp, init_norm,
+                     make_positions, softcap)
+from .ssm import init_mamba, init_ssm_state, mamba_sequence, mamba_step
+
+__all__ = ["HybridLM"]
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "hybrid" and cfg.shared_attn_every > 0
+        assert cfg.n_layers % cfg.shared_attn_every == 0
+        self.cfg = cfg
+        self.n_sites = cfg.n_layers // cfg.shared_attn_every
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, cfg.n_layers + 4)
+
+        def layer(k):
+            return {"ln": init_norm(cfg, dt), "mamba": init_mamba(k, cfg, dt)}
+
+        g, e = self.n_sites, cfg.shared_attn_every
+        stacked = jax.vmap(layer)(jnp.stack(keys[4:4 + cfg.n_layers]))
+        # reshape (L, ...) -> (sites, every, ...) for the super-block scan
+        stacked = jax.tree.map(
+            lambda a: a.reshape((g, e) + a.shape[1:]), stacked)
+
+        params: Params = {
+            "embed": _dense_init(keys[0], (cfg.vocab, cfg.d_model), dt),
+            "final_norm": init_norm(cfg, dt),
+            "layers": stacked,
+            "shared_ln1": init_norm(cfg, dt),
+            "shared_attn": init_attention(keys[1], cfg, dt),
+            "shared_ln2": init_norm(cfg, dt),
+            "shared_mlp": init_mlp(keys[2], cfg, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = _dense_init(keys[3], (cfg.d_model, cfg.vocab), dt)
+        return params
+
+    # ------------------------------------------------------------------
+    def _logits(self, params, h):
+        cfg = self.cfg
+        h = apply_norm(params["final_norm"], h, cfg.norm_kind)
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return softcap((h @ w.astype(h.dtype)).astype(jnp.float32),
+                       cfg.logit_softcap)
+
+    def _shared_block(self, params, x, positions, *, cache=None,
+                      cache_len=None, kv_chunk=0):
+        cfg = self.cfg
+        h = apply_norm(params["shared_ln1"], x, cfg.norm_kind)
+        a, new_cache = apply_attention(params["shared_attn"], cfg, h,
+                                       positions, cache=cache,
+                                       cache_len=cache_len, causal=True,
+                                       kv_chunk=kv_chunk)
+        x = x + a
+        h = apply_norm(params["shared_ln2"], x, cfg.norm_kind)
+        return x + apply_mlp(params["shared_mlp"], cfg, h), new_cache
+
+    # ------------------------------------------------------------------
+    def _forward(self, params, x, positions, mamba_states, *,
+                 attn_caches=None, cache_len=None, kv_chunk=0, step=False):
+        cfg = self.cfg
+
+        def super_block(carry, xs):
+            x = carry
+            if attn_caches is None:
+                lp, st = xs
+                kc = vc = None
+            else:
+                lp, st, kc, vc = xs
+            x = constrain_residual(x)
+            x, new_cache = self._shared_block(
+                params, x, positions,
+                cache=None if kc is None else (kc, vc),
+                cache_len=cache_len, kv_chunk=kv_chunk)
+
+            def mamba_layer(x, inner):
+                ilp, ist = inner
+
+                def inner_fn(ilp, x, ist):
+                    h = apply_norm(ilp["ln"], x, cfg.norm_kind)
+                    fn = mamba_step if step else mamba_sequence
+                    y, ist_new = fn(ilp["mamba"], cfg, h, ist)
+                    return x + y, ist_new
+
+                return maybe_remat(inner_fn)(ilp, x, ist)
+
+            x, st_new = lax.scan(mamba_layer, x, (lp, st))
+            out = (st_new,) if new_cache is None else (st_new,) + new_cache
+            return x, out
+
+        xs = (params["layers"], mamba_states)
+        if attn_caches is not None:
+            xs = xs + (attn_caches["k"], attn_caches["v"])
+        x, outs = lax.scan(super_block, x, xs)
+        new_states = outs[0]
+        new_caches = None
+        if attn_caches is not None:
+            new_caches = {"k": outs[1], "v": outs[2]}
+        return x, new_states, new_caches
+
+    # ------------------------------------------------------------------
+    def _stacked_states(self, batch: int):
+        cfg = self.cfg
+        one = init_ssm_state(cfg, batch, jnp.dtype(cfg.dtype))
+        g, e = self.n_sites, cfg.shared_attn_every
+        return jax.tree.map(
+            lambda a: jnp.zeros((g, e) + a.shape, a.dtype), one)
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        tokens, targets = batch["tokens"], batch["targets"]
+        mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        positions = make_positions(B, S)
+        kv_chunk = 1024 if S >= 16384 else 0
+        h, _, _ = self._forward(params, x, positions,
+                                self._stacked_states(B), kv_chunk=kv_chunk)
+        logits = self._logits(params, h)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce, {"ce": ce}
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        st = self._stacked_states(batch)
+        K, hd = cfg.n_kv_heads, cfg.hd()
+        return {
+            "ssm": st["ssm"], "conv": st["conv"],
+            "k": jnp.zeros((self.n_sites, batch, max_len, K, hd), dt),
+            "v": jnp.zeros((self.n_sites, batch, max_len, K, hd), dt),
+            "len": jnp.zeros((), jnp.int32),
+        }
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        max_len = max_len or S
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        positions = make_positions(B, S)
+        cache = self.init_cache(B, max_len)
+        kv_chunk = 1024 if S >= 16384 else 0
+        h, st, kv = self._forward(
+            params, x, positions, {"ssm": cache["ssm"], "conv": cache["conv"]},
+            attn_caches={"k": cache["k"], "v": cache["v"]},
+            cache_len=jnp.zeros((), jnp.int32), kv_chunk=kv_chunk)
+        logits = self._logits(params, h[:, -1:, :])
+        return logits[:, 0], {"ssm": st["ssm"], "conv": st["conv"],
+                              "k": kv["k"], "v": kv["v"],
+                              "len": jnp.full((), S, jnp.int32)}
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = cache["len"]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        h, st, kv = self._forward(
+            params, x, positions, {"ssm": cache["ssm"], "conv": cache["conv"]},
+            attn_caches={"k": cache["k"], "v": cache["v"]},
+            cache_len=pos, step=True)
+        logits = self._logits(params, h)
+        return logits[:, 0], {"ssm": st["ssm"], "conv": st["conv"],
+                              "k": kv["k"], "v": kv["v"], "len": pos + 1}

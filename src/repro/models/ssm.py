@@ -1,0 +1,198 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Implements the chunked SSD dual form for training/prefill (quadratic
+within a chunk, linear across chunks) and the O(1)-per-token recurrence
+for decode.  The per-chunk einsums are MXU-shaped (chunk x chunk and
+chunk x state matmuls), which is what the Pallas kernel in
+``repro.kernels.ssd_scan`` tiles explicitly; this module is the XLA
+reference path used by the dry-run.
+
+Shapes: heads H = d_inner / head_dim P, single B/C group (G=1), state N.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .blocks import Params, _dense_init, apply_norm
+
+__all__ = ["init_mamba", "mamba_sequence", "mamba_step", "init_ssm_state"]
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    d, di = cfg.d_model, cfg.d_inner()
+    N, H, K = cfg.ssm_state, cfg.ssm_heads(), cfg.conv_kernel
+    conv_ch = di + 2 * N                       # x + B + C go through conv
+    ks = jax.random.split(key, 4)
+    out_std = 0.02 / math.sqrt(2 * max(1, cfg.n_layers))
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * N + H), dtype),
+        "conv_w": _dense_init(ks[1], (K, conv_ch), dtype, std=0.2),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": _dense_init(ks[2], (di, d), dtype, std=out_std),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    di, N, H = cfg.d_inner(), cfg.ssm_state, cfg.ssm_heads()
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d.  xbc: (B, S, C), w: (K, C).
+
+    Returns (y, new_state) where state carries the trailing K-1 inputs.
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    ext = jnp.concatenate([state, xbc], axis=1)                # (B, K-1+S, C)
+    y = sum(ext[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    new_state = ext[:, -(K - 1):, :] if K > 1 else state
+    return jax.nn.silu(y + b), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, P, N, K = (cfg.ssm_heads(), cfg.ssm_head_dim, cfg.ssm_state,
+                  cfg.conv_kernel)
+    di = cfg.d_inner()
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, di + 2 * N), dtype),
+    }
+
+
+def _ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                 h0: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD dual-form over chunks.
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      positive step sizes
+    A:  (H,)           negative decay rates
+    Bm, Cm: (B, S, N)  input/output projections (G=1, shared over heads)
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    n_chunks = (S + Q - 1) // Q
+    pad = n_chunks * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    def reshape_c(t):
+        return t.reshape((Bsz, n_chunks, Q) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    xc, dtc, Bc, Cc = map(reshape_c, (x, dt, Bm, Cm))   # leading n_chunks
+
+    a = dtc * A[None, None, :]                      # (c, B, Q, H) log-decay
+    cum = jnp.cumsum(a, axis=2)                     # within-chunk cumsum
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def chunk_step(h, inp):
+        xq, dtq, bq, cq, aq, cumq = inp
+        # decay matrix L[i, j] = exp(cum_i - cum_j) for i >= j else 0.
+        # Mask BEFORE exp: masked entries have diff > 0 and overflow to
+        # inf, and where(c, inf, 0) poisons the backward with 0*inf=NaN.
+        diff = cumq[:, :, None, :] - cumq[:, None, :, :]     # (B,Q,Q,H)
+        iq = jnp.arange(xq.shape[1])
+        causal = (iq[:, None] >= iq[None, :])[None, :, :, None]
+        L = jnp.exp(jnp.where(causal, diff, -1e30))
+        # intra-chunk: scores (B,Q,Q) from C_i . B_j; weight by L and dt_j
+        s = jnp.einsum("bin,bjn->bij", cq, bq)               # (B,Q,Q)
+        w = s[:, :, :, None] * L * dtq[:, None, :, :]        # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xq)
+        # inter-chunk: contribution of the carried state
+        decay_in = jnp.exp(cumq)                             # (B,Q,H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq, h, decay_in)
+        y = y_intra + y_inter
+        # state update: h' = exp(sum a) h + sum_j exp(cum_Q - cum_j) dt_j B_j x_j
+        total = cumq[:, -1, :]                               # (B,H)
+        rem = jnp.exp(total[:, None, :] - cumq)              # (B,Q,H)
+        contrib = jnp.einsum("bjh,bjn,bjhp->bhpn", rem * dtq, bq, xq)
+        h_new = jnp.exp(total)[:, :, None, None] * h + contrib
+        return h_new, y
+
+    h_fin, yc = lax.scan(chunk_step, h0,
+                         (xc.astype(jnp.float32), dtc, Bc.astype(jnp.float32),
+                          Cc.astype(jnp.float32), a, cum))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, n_chunks * Q, H, P)
+    return y[:, :S], h_fin
+
+
+def mamba_sequence(p: Params, cfg: ModelConfig, u: jnp.ndarray,
+                   state: Optional[Dict[str, jnp.ndarray]] = None
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence Mamba2 block (training / prefill).
+
+    u: (B, S, d_model) -> (y, final_state).
+    """
+    B, S, d = u.shape
+    di, N, H, P = cfg.d_inner(), cfg.ssm_state, cfg.ssm_heads(), cfg.ssm_head_dim
+    proj = u @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    conv_state = state["conv"] if state else None
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    xh = xs.reshape(B, S, H, P)
+    h0 = state["ssm"] if state else None
+    y, h_fin = _ssd_chunked(xh.astype(jnp.float32), dt, A, Bm, Cm,
+                            cfg.ssm_chunk, h0)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = apply_norm({"scale": p["norm_scale"]}, y, "rmsnorm")
+    out = y @ p["out_proj"]
+    return out, {"ssm": h_fin, "conv": conv_state}
+
+
+def mamba_step(p: Params, cfg: ModelConfig, u: jnp.ndarray,
+               state: Dict[str, jnp.ndarray]
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token recurrent step (decode).  u: (B, 1, d_model)."""
+    B, _, d = u.shape
+    di, N, H, P = cfg.d_inner(), cfg.ssm_state, cfg.ssm_heads(), cfg.ssm_head_dim
+    proj = u[:, 0] @ p["in_proj"]                                 # (B, .)
+    z, xbc, dt = _split_proj(cfg, proj)
+    # conv step: append to rolling window
+    K = p["conv_w"].shape[0]
+    win = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B,K,C)
+    y_conv = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(y_conv)
+    new_conv = win[:, 1:, :]
+    xs, Bm, Cm = jnp.split(xbc1, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    h = state["ssm"]                                              # (B,H,P,N)
+    decay = jnp.exp(dt * A)[:, :, None, None]
+    h_new = h * decay + jnp.einsum("bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h_new)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(u.dtype) * jax.nn.silu(z)
+    y = apply_norm({"scale": p["norm_scale"]}, y, "rmsnorm")
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"ssm": h_new, "conv": new_conv}

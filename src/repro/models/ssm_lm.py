@@ -1,0 +1,124 @@
+"""Mamba2 language model (attention-free, SSD blocks)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import constrain, constrain_residual
+from ..train.remat import maybe_remat
+from .blocks import Params, _dense_init, apply_norm, init_norm, softcap
+from .ssm import init_mamba, init_ssm_state, mamba_sequence, mamba_step
+
+__all__ = ["MambaLM"]
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "ssm"
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, cfg.n_layers + 2)
+
+        def layer(k):
+            k1, _ = jax.random.split(k)
+            return {"ln": init_norm(cfg, dt), "mamba": init_mamba(k1, cfg, dt)}
+
+        params: Params = {
+            "embed": _dense_init(keys[0], (cfg.vocab, cfg.d_model), dt),
+            "final_norm": init_norm(cfg, dt),
+            "layers": jax.vmap(layer)(jnp.stack(keys[2:2 + cfg.n_layers])),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = _dense_init(keys[1], (cfg.d_model, cfg.vocab), dt)
+        return params
+
+    # ------------------------------------------------------------------
+    def _logits(self, params, h):
+        cfg = self.cfg
+        h = apply_norm(params["final_norm"], h, cfg.norm_kind)
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return softcap((h @ w.astype(h.dtype)).astype(jnp.float32),
+                       cfg.logit_softcap)
+
+    def _forward(self, params, x, states=None):
+        cfg = self.cfg
+
+        def one_layer(lp, x, st):
+            h = apply_norm(lp["ln"], x, cfg.norm_kind)
+            y, st_new = mamba_sequence(lp["mamba"], cfg, h, st)
+            return x + y, st_new
+
+        one_layer = maybe_remat(one_layer)
+
+        def body(carry, layer):
+            x = carry
+            lp, st = layer
+            x = constrain_residual(x)
+            x, st_new = one_layer(lp, x, st)
+            return x, st_new
+
+        x, new_states = lax.scan(body, x, (params["layers"], states))
+        return x, new_states
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        tokens, targets = batch["tokens"], batch["targets"]
+        mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        states = self._stacked_states(tokens.shape[0])
+        h, _ = self._forward(params, x, states)
+        logits = self._logits(params, h)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce, {"ce": ce}
+
+    # ------------------------------------------------------------------
+    def _stacked_states(self, batch: int):
+        cfg = self.cfg
+        one = init_ssm_state(cfg, batch, jnp.dtype(cfg.dtype))
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        st = self._stacked_states(batch)
+        st["len"] = jnp.zeros((), jnp.int32)
+        return st
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        states = self._stacked_states(B)
+        h, new_states = self._forward(params, x, states)
+        new_states["len"] = jnp.full((), S, jnp.int32)
+        logits = self._logits(params, h[:, -1:, :])
+        return logits[:, 0], new_states
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        pos = cache["len"]
+
+        def body(x, layer):
+            lp, st = layer
+            h = apply_norm(lp["ln"], x, cfg.norm_kind)
+            y, st_new = mamba_step(lp["mamba"], cfg, h, st)
+            return x + y, st_new
+
+        states = {k: cache[k] for k in ("ssm", "conv")}
+        x, new_states = lax.scan(body, x, (params["layers"], states))
+        cache = dict(new_states, len=pos + 1)
+        logits = self._logits(params, x)
+        return logits[:, 0], cache

@@ -1,0 +1,354 @@
+"""Decoder-only transformer LM (dense and MoE families).
+
+Layer parameters are stacked along a leading L axis and the forward pass
+is a single ``lax.scan`` over layers, so full-size configs (80L / 61L)
+lower to one compiled layer body — essential for the 512-device dry-run.
+Per-layer *structure* differences (gemma2's local/global alternation) are
+expressed as per-layer scalar scan inputs (the sliding-window size), not
+as python branches, keeping one code path.
+
+Entry points (used by train/serve/launch):
+  * ``init``         — parameter pytree
+  * ``loss``         — next-token CE (+ MoE aux), seq-chunked for big vocabs
+  * ``prefill``      — build KV caches, return last-position logits
+  * ``decode_step``  — one token with KV caches
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import constrain, constrain_residual
+from ..train.remat import maybe_remat
+from .blocks import (Params, _dense_init, apply_attention, apply_mlp,
+                     apply_moe, apply_norm, init_attention, init_mlp,
+                     init_moe, init_norm, make_positions, softcap)
+
+__all__ = ["DecoderLM"]
+
+_PREFILL_CHUNK_THRESHOLD = 16384   # switch attention to streaming form
+_KV_CHUNK = 1024
+_LOSS_VOCAB_THRESHOLD = 65536      # seq-chunk the CE loss above this vocab
+_LOSS_CHUNK = 512
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+class DecoderLM:
+    """Dense or MoE decoder LM defined by a ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(cfg.family)
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+    def _init_layer(self, key, moe: bool) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p: Params = {
+            "ln1": init_norm(cfg, dt),
+            "attn": init_attention(k1, cfg, dt),
+            "ln2": init_norm(cfg, dt),
+        }
+        if cfg.post_norms:
+            p["ln1_post"] = init_norm(cfg, dt)
+            p["ln2_post"] = init_norm(cfg, dt)
+        if moe:
+            p["moe"] = init_moe(k2, cfg, dt)
+        else:
+            p["mlp"] = init_mlp(k3, cfg, dt)
+        return p
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, cfg.n_layers + 3)
+        n_dense = cfg.first_dense_layers if cfg.n_experts else 0
+        n_scan = cfg.n_layers - n_dense
+        moe_scan = bool(cfg.n_experts)
+
+        params: Params = {
+            "embed": _dense_init(keys[0], (cfg.vocab, cfg.d_model), dt),
+            "final_norm": init_norm(cfg, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = _dense_init(keys[1], (cfg.d_model, cfg.vocab), dt)
+        if n_dense:
+            params["dense_layers"] = jax.vmap(
+                lambda k: self._init_layer(k, moe=False)
+            )(jnp.stack(keys[2:2 + n_dense]))
+        params["layers"] = jax.vmap(
+            lambda k: self._init_layer(k, moe=moe_scan)
+        )(jnp.stack(keys[2 + n_dense:2 + n_dense + n_scan]))
+        return params
+
+    # ------------------------------------------------------------------
+    # Per-layer windows (gemma2 local/global alternation)
+    # ------------------------------------------------------------------
+    def _windows(self, n: int, offset: int = 0) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.local_global_alternate and cfg.sliding_window:
+            idx = jnp.arange(offset, offset + n)
+            return jnp.where(idx % 2 == 0, cfg.sliding_window, 0).astype(jnp.int32)
+        if cfg.sliding_window:
+            return jnp.full((n,), cfg.sliding_window, jnp.int32)
+        return jnp.zeros((n,), jnp.int32)
+
+    # ------------------------------------------------------------------
+    # Layer body
+    # ------------------------------------------------------------------
+    def _block(self, lp: Params, x, positions, window, *, moe: bool,
+               kv_chunk: int = 0, cache=None, cache_len=None):
+        cfg = self.cfg
+        h = apply_norm(lp["ln1"], x, cfg.norm_kind)
+        attn_out, new_cache = apply_attention(
+            lp["attn"], cfg, h, positions, cache=cache, cache_len=cache_len,
+            causal=True, window=window, kv_chunk=kv_chunk)
+        if cfg.post_norms:
+            attn_out = apply_norm(lp["ln1_post"], attn_out, cfg.norm_kind)
+        x = x + attn_out
+        h = apply_norm(lp["ln2"], x, cfg.norm_kind)
+        aux = jnp.zeros((), jnp.float32)
+        if moe:
+            mlp_out, aux = apply_moe(lp["moe"], cfg, h)
+        else:
+            mlp_out = apply_mlp(lp["mlp"], cfg, h)
+        if cfg.post_norms:
+            mlp_out = apply_norm(lp["ln2_post"], mlp_out, cfg.norm_kind)
+        return x + mlp_out, aux, new_cache
+
+    # ------------------------------------------------------------------
+    # Forward over all layers
+    # ------------------------------------------------------------------
+    def _forward(self, params: Params, x, positions, *, kv_chunk: int = 0
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Sequence forward (no caches).  Returns (hidden, aux_loss)."""
+        cfg = self.cfg
+        n_dense = cfg.first_dense_layers if cfg.n_experts else 0
+        if n_dense:
+            dl = params["dense_layers"]
+            wins = self._windows(n_dense)
+            for i in range(n_dense):
+                lp = jax.tree.map(lambda a: a[i], dl)
+                x, _, _ = self._block(lp, x, positions, wins[i], moe=False,
+                                      kv_chunk=kv_chunk)
+        moe = bool(cfg.n_experts)
+        wins = self._windows(cfg.n_layers - n_dense, offset=n_dense)
+
+        def one_layer(lp, x, win):
+            y, a, _ = self._block(lp, x, positions, win, moe=moe,
+                                  kv_chunk=kv_chunk)
+            return y, a
+
+        one_layer = maybe_remat(one_layer)
+
+        def body(carry, layer):
+            x, aux = carry
+            lp, win = layer
+            x = constrain_residual(x)
+            x, a = one_layer(lp, x, win)
+            return (x, aux + a), None
+
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (params["layers"], wins))
+        return x, aux
+
+    def _embed(self, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        x = params["embed"][tokens]
+        return x.astype(_dtype(self.cfg))
+
+    def _logits(self, params: Params, h: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        h = apply_norm(params["final_norm"], h, cfg.norm_kind)
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = h @ w.astype(h.dtype)
+        return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+    # ------------------------------------------------------------------
+    # Training loss
+    # ------------------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        tokens, targets = batch["tokens"], batch["targets"]
+        mask = batch.get("mask")
+        B, S = tokens.shape
+        positions = batch.get("mrope_positions") if cfg.mrope else None
+        if positions is None:
+            positions = make_positions(B, S)
+            if cfg.mrope:
+                positions = jnp.broadcast_to(positions[None], (3, B, S))
+        x = self._embed(params, tokens)
+        if "extra_embeds" in batch:        # VLM stub frontend outputs
+            x = x + batch["extra_embeds"].astype(x.dtype)
+        kv_chunk = _KV_CHUNK if S >= _PREFILL_CHUNK_THRESHOLD else 0
+        # §Perf experiment lever: force streaming attention at train time
+        # (REPRO_TRAIN_KV_CHUNK=1024) — cuts the f32 score-buffer HBM
+        # traffic by ~S/chunk at identical FLOPs.
+        env_chunk = int(os.environ.get("REPRO_TRAIN_KV_CHUNK", "0"))
+        if env_chunk:
+            kv_chunk = env_chunk
+        h, aux = self._forward(params, x, positions, kv_chunk=kv_chunk)
+
+        ce, denom = _chunked_ce(lambda hh: self._logits(params, hh), h,
+                                targets, mask,
+                                chunked=cfg.vocab >= _LOSS_VOCAB_THRESHOLD)
+        loss = ce / denom
+        if cfg.n_experts:
+            loss = loss + 0.01 * aux / cfg.n_layers
+        return loss, {"ce": ce / denom, "aux": aux}
+
+    # ------------------------------------------------------------------
+    # Serving
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        K, hd = cfg.n_kv_heads, cfg.hd()
+        n_dense = cfg.first_dense_layers if cfg.n_experts else 0
+        n_scan = cfg.n_layers - n_dense
+        cache = {
+            "k": jnp.zeros((n_scan, batch, max_len, K, hd), dt),
+            "v": jnp.zeros((n_scan, batch, max_len, K, hd), dt),
+            "len": jnp.zeros((), jnp.int32),
+        }
+        if n_dense:
+            cache["k_dense"] = jnp.zeros((n_dense, batch, max_len, K, hd), dt)
+            cache["v_dense"] = jnp.zeros((n_dense, batch, max_len, K, hd), dt)
+        return cache
+
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray],
+                max_len: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """Process the prompt, build caches, return last-token logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        max_len = max_len or S
+        positions = batch.get("mrope_positions") if cfg.mrope else None
+        if positions is None:
+            positions = make_positions(B, S)
+            if cfg.mrope:
+                positions = jnp.broadcast_to(positions[None], (3, B, S))
+        x = self._embed(params, tokens)
+        if "extra_embeds" in batch:
+            x = x + batch["extra_embeds"].astype(x.dtype)
+        kv_chunk = _KV_CHUNK if S >= _PREFILL_CHUNK_THRESHOLD else 0
+        cache = self.init_cache(B, max_len)
+        zero = jnp.zeros((), jnp.int32)
+
+        n_dense = cfg.first_dense_layers if cfg.n_experts else 0
+        for i in range(n_dense):
+            lp = jax.tree.map(lambda a: a[i], params["dense_layers"])
+            x, _, (kc, vc) = self._block(
+                lp, x, positions, self._windows(n_dense)[i], moe=False,
+                kv_chunk=kv_chunk,
+                cache=(cache["k_dense"][i], cache["v_dense"][i]),
+                cache_len=zero)
+            cache["k_dense"] = cache["k_dense"].at[i].set(kc)
+            cache["v_dense"] = cache["v_dense"].at[i].set(vc)
+
+        moe = bool(cfg.n_experts)
+        wins = self._windows(cfg.n_layers - n_dense, offset=n_dense)
+
+        def body(x, layer):
+            lp, win, kc, vc = layer
+            x = constrain_residual(x)
+            x, _, (kc, vc) = self._block(lp, x, positions, win, moe=moe,
+                                         kv_chunk=kv_chunk, cache=(kc, vc),
+                                         cache_len=zero)
+            return x, (kc, vc)
+
+        x, (ks, vs) = lax.scan(body, x,
+                               (params["layers"], wins, cache["k"], cache["v"]))
+        cache["k"], cache["v"] = ks, vs
+        cache["len"] = jnp.full((), S, jnp.int32)
+        logits = self._logits(params, x[:, -1:, :])
+        return logits[:, 0], cache
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray,
+                    cache: Dict[str, Any]
+                    ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """One decode step.  tokens: (B, 1)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = cache["len"]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, B, 1))
+        x = self._embed(params, tokens)
+
+        n_dense = cfg.first_dense_layers if cfg.n_experts else 0
+        for i in range(n_dense):
+            lp = jax.tree.map(lambda a: a[i], params["dense_layers"])
+            x, _, (kc, vc) = self._block(
+                lp, x, positions, self._windows(n_dense)[i], moe=False,
+                cache=(cache["k_dense"][i], cache["v_dense"][i]),
+                cache_len=pos)
+            cache["k_dense"] = cache["k_dense"].at[i].set(kc)
+            cache["v_dense"] = cache["v_dense"].at[i].set(vc)
+
+        moe = bool(cfg.n_experts)
+        wins = self._windows(cfg.n_layers - n_dense, offset=n_dense)
+
+        def body(x, layer):
+            lp, win, kc, vc = layer
+            x, _, (kc, vc) = self._block(lp, x, positions, win, moe=moe,
+                                         cache=(kc, vc), cache_len=pos)
+            return x, (kc, vc)
+
+        x, (ks, vs) = lax.scan(body, x,
+                               (params["layers"], wins, cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs, len=pos + 1)
+        logits = self._logits(params, x)
+        return logits[:, 0], cache
+
+
+def _chunked_ce(logits_fn, h: jnp.ndarray, targets: jnp.ndarray,
+                mask: Optional[jnp.ndarray], *, chunked: bool
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sum of CE over (possibly seq-chunked) positions + valid count.
+
+    Chunking keeps the (B, chunk, V) logits buffer bounded for 150k-250k
+    vocabularies — the full (B, S, V) tensor would dominate HBM.
+    """
+    B, S, _ = h.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    def ce_of(hh, tt, mm):
+        lg = logits_fn(hh)                             # (B, c, V) f32
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tt[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mm)
+
+    if not chunked or S % _LOSS_CHUNK or S <= _LOSS_CHUNK:
+        return ce_of(h, targets, mask), jnp.maximum(jnp.sum(mask), 1.0)
+
+    n = S // _LOSS_CHUNK
+    hc = h.reshape(B, n, _LOSS_CHUNK, -1).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n, _LOSS_CHUNK).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, _LOSS_CHUNK).transpose(1, 0, 2)
+
+    ce_chunk = jax.checkpoint(ce_of)   # recompute chunk logits in backward
+
+    def body(tot, xs):
+        hh, tt, mm = xs
+        return tot + ce_chunk(hh, tt, mm), None
+
+    tot, _ = lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc, mc))
+    return tot, jnp.maximum(jnp.sum(mask), 1.0)

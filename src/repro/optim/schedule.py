@@ -1,0 +1,18 @@
+"""LR schedules: linear warmup + cosine decay (the zoo default)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine"]
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10000,
+                  floor: float = 0.1):
+    """Scale factor in [floor, 1]: linear warmup then cosine to floor."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(1.0, float(warmup)), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, float(total - warmup)),
+                    0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return warm * cos

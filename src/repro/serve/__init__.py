@@ -1,0 +1,5 @@
+"""Serving: jitted generation + host-side batched engine."""
+
+from .engine import Request, ServeEngine, generate, make_generate
+
+__all__ = ["generate", "make_generate", "ServeEngine", "Request"]

@@ -1,0 +1,7 @@
+"""Training: step factory, remat policies, loop."""
+
+from .remat import maybe_remat, remat_context
+from .step import TrainStepConfig, make_loss_fn, make_train_step
+
+__all__ = ["make_train_step", "make_loss_fn", "TrainStepConfig",
+           "remat_context", "maybe_remat"]

@@ -1,0 +1,54 @@
+"""Activation-checkpoint (remat) policies, applied at the layer-scan body.
+
+Models wrap their per-layer block with :func:`maybe_remat`; which policy
+is active is a context installed by the train step — the models stay
+policy-agnostic.  Policies:
+
+  * ``none``  — save everything (prefill/decode, small models);
+  * ``full``  — save only layer boundaries (max memory saving, recompute
+    the whole block in backward);
+  * ``dots``  — ``checkpoint_dots``: save matmul outputs, recompute the
+    cheap elementwise chain (the usual best trade-off on TPU).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional
+
+import jax
+
+__all__ = ["remat_context", "maybe_remat", "current_policy"]
+
+_ctx = threading.local()
+
+_POLICIES = {
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+@contextlib.contextmanager
+def remat_context(policy: Optional[str]):
+    prev = getattr(_ctx, "policy", None)
+    _ctx.policy = policy
+    try:
+        yield
+    finally:
+        _ctx.policy = prev
+
+
+def current_policy() -> Optional[str]:
+    return getattr(_ctx, "policy", None)
+
+
+def maybe_remat(fn: Callable) -> Callable:
+    """Wrap a layer body according to the active policy (identity when
+    no policy is installed)."""
+    policy = current_policy()
+    if policy in (None, "none"):
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(fn, policy=_POLICIES[policy])

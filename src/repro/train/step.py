@@ -1,0 +1,114 @@
+"""Train-step factory: microbatched, remat-policied, mixed-precision.
+
+``make_train_step`` builds the function the launcher jits/lowers:
+
+    step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+Features (all knobs the COSMOS-TPU planner can turn, DESIGN.md §2):
+  * microbatch gradient accumulation (``microbatches`` — the "unrolls"
+    analogue: time/space trade inside a fixed sharding);
+  * remat policy for the layer scan (none/full/dots);
+  * fp32 grad accumulation over bf16 compute, optional bf16 accumulation
+    (halves the cross-pod gradient all-reduce bytes — §Perf lever);
+  * optional error-feedback int8 gradient compression (``repro.dist``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..dist.compression import ef_compress_tree
+from ..optim import (AdamWConfig, OptState, QuantOptState, apply_updates,
+                     apply_updates_q8, warmup_cosine)
+from .remat import remat_context
+
+__all__ = ["TrainStepConfig", "make_train_step", "make_loss_fn"]
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    remat: Optional[str] = "full"          # none | full | dots | dots_no_batch
+    accum_dtype: str = "float32"           # float32 | bfloat16
+    compress_grads_bits: int = 0           # 0 = off; 8 = int8 error feedback
+    quantized_moments: bool = False        # 8-bit AdamW states (1T-scale)
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+def make_loss_fn(model, remat: Optional[str]):
+    def loss_fn(params, batch):
+        with remat_context(remat):
+            loss, metrics = model.loss(params, batch)
+        return loss, metrics
+    return loss_fn
+
+
+def _split_microbatches(batch: Dict[str, Any], n: int) -> Dict[str, Any]:
+    def split(path_unused, x):
+        return x  # placeholder, replaced below
+    out = {}
+    for k, v in batch.items():
+        if k == "mrope_positions":          # (3, B, S): batch is dim 1
+            B = v.shape[1]
+            assert B % n == 0, f"batch {B} not divisible by {n} microbatches"
+            out[k] = v.reshape(v.shape[0], n, B // n, *v.shape[2:]).swapaxes(0, 1)
+        else:
+            B = v.shape[0]
+            assert B % n == 0, f"batch {B} not divisible by {n} microbatches"
+            out[k] = v.reshape(n, B // n, *v.shape[1:])
+    return out
+
+
+def make_train_step(model, opt_cfg: AdamWConfig,
+                    cfg: TrainStepConfig = TrainStepConfig()
+                    ) -> Callable:
+    """Build the jittable train step for ``model``."""
+    loss_fn = make_loss_fn(model, cfg.remat)
+    grad_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b), has_aux=True)
+    acc_dt = jnp.dtype(cfg.accum_dtype)
+
+    def step(params, opt_state: OptState, batch):
+        if cfg.microbatches > 1:
+            mbs = _split_microbatches(batch, cfg.microbatches)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+            def accum(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            (grads, loss_sum), _ = lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / cfg.microbatches, grads)
+            loss = loss_sum / cfg.microbatches
+            metrics: Dict[str, jnp.ndarray] = {}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if cfg.compress_grads_bits:
+            grads, _ = ef_compress_tree(grads, bits=cfg.compress_grads_bits)
+
+        lr_scale = warmup_cosine(opt_state.step, warmup=cfg.warmup_steps,
+                                 total=cfg.total_steps)
+        if cfg.quantized_moments:
+            params, opt_state, opt_metrics = apply_updates_q8(
+                opt_cfg, params, grads, opt_state, lr_scale=lr_scale)
+        else:
+            params, opt_state, opt_metrics = apply_updates(
+                opt_cfg, params, grads, opt_state, lr_scale=lr_scale)
+        out = {"loss": loss, **opt_metrics}
+        if isinstance(metrics, dict):
+            out.update({k: v for k, v in metrics.items()
+                        if jnp.ndim(v) == 0})
+        return params, opt_state, out
+
+    return step

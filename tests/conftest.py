@@ -1,0 +1,11 @@
+"""Shared pytest config.
+
+NOTE: XLA_FLAGS / device-count forcing deliberately NOT set here — smoke
+tests and benches run on the single real CPU device; only
+launch/dryrun.py (its own process) forces 512 host devices.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,161 @@
+"""COSMOS-TPU autotune pricing + the trip-count-aware HLO analyzer."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.configs import SHAPES, get_config
+from repro.core.autotune import (HBM_BYTES_PER_CHIP, choose_train_knobs,
+                                 price_train_step)
+from repro.launch.hlo_analysis import (CollectiveStats, analyze_hlo,
+                                       parse_collectives, roofline_terms)
+from repro.optim import (AdamWConfig, apply_updates, apply_updates_q8,
+                         init_opt, init_opt_q8)
+
+MESH = {"data": 16, "model": 16}
+TRAIN = SHAPES[0]
+
+
+# ----------------------------------------------------------------------
+# autotune pricing
+# ----------------------------------------------------------------------
+def test_price_monotone_in_microbatches():
+    cfg = get_config("gemma2-9b")
+    prices = [price_train_step(cfg, TRAIN, MESH, microbatches=mb,
+                               remat="full").est_bytes
+              for mb in (1, 2, 4, 8)]
+    assert all(a > b for a, b in zip(prices, prices[1:]))
+
+
+def test_choose_knobs_fits_when_possible():
+    for arch in ("gemma2-9b", "qwen2-0.5b", "zamba2-2.7b", "mamba2-780m"):
+        plan = choose_train_knobs(get_config(arch), TRAIN, MESH)
+        assert plan.est_bytes <= HBM_BYTES_PER_CHIP, arch
+
+
+def test_choose_knobs_reports_honest_deficit():
+    """kimi-k2 at 256 chips cannot fit — the planner must say so, not lie."""
+    plan = choose_train_knobs(get_config("kimi-k2-1t-a32b"), TRAIN, MESH)
+    assert plan.est_bytes > HBM_BYTES_PER_CHIP
+    assert not plan.fits
+
+
+def test_remat_ladder_ordering():
+    cfg = get_config("gemma2-9b")
+    dots = price_train_step(cfg, TRAIN, MESH, microbatches=8, remat="dots")
+    full = price_train_step(cfg, TRAIN, MESH, microbatches=8, remat="full")
+    none = price_train_step(cfg, TRAIN, MESH, microbatches=8, remat="none")
+    assert full.est_bytes < dots.est_bytes < none.est_bytes
+
+
+# ----------------------------------------------------------------------
+# HLO analyzer
+# ----------------------------------------------------------------------
+def _flops(fn, *specs):
+    txt = jax.jit(fn).lower(*specs).compile().as_text()
+    return analyze_hlo(txt)
+
+
+def test_analyzer_scan_equals_unrolled():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def scan_mm(x, w):
+        return lax.scan(lambda c, _: (c @ w, None), x, None, length=7)[0]
+
+    def unroll_mm(x, w):
+        for _ in range(7):
+            x = x @ w
+        return x
+
+    a = _flops(scan_mm, x, w)
+    b = _flops(unroll_mm, x, w)
+    want = 7 * 2 * 128 ** 3
+    assert a.flops == pytest.approx(want, rel=1e-6)
+    assert b.flops == pytest.approx(want, rel=1e-6)
+
+
+def test_analyzer_nested_scan():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def nested(x, w):
+        def outer(c, _):
+            return lax.scan(lambda c2, _: (c2 @ w, None), c, None,
+                            length=5)[0], None
+        return lax.scan(outer, x, None, length=3)[0]
+
+    a = _flops(nested, x, w)
+    assert a.flops == pytest.approx(15 * 2 * 64 ** 3, rel=1e-6)
+
+
+def test_collective_ring_model():
+    s = CollectiveStats()
+    s.add("all-reduce", 1000.0, 4)     # 2*(3/4)*1000
+    s.add("all-gather", 1000.0, 4)     # (3/4)*1000
+    s.add("collective-permute", 1000.0, 4)
+    assert s.per_op["all-reduce"] == pytest.approx(1500.0)
+    assert s.per_op["all-gather"] == pytest.approx(750.0)
+    assert s.per_op["collective-permute"] == pytest.approx(1000.0)
+
+
+def test_roofline_bound_selection():
+    t = roofline_terms(flops_per_device=197e12, bytes_per_device=0,
+                       collective_bytes=0)
+    assert t["bound"] == "compute" and t["t_compute_s"] == pytest.approx(1.0)
+    t = roofline_terms(flops_per_device=0, bytes_per_device=819e9,
+                       collective_bytes=0)
+    assert t["bound"] == "memory"
+    t = roofline_terms(flops_per_device=0, bytes_per_device=0,
+                       collective_bytes=50e9)
+    assert t["bound"] == "collective"
+
+
+# ----------------------------------------------------------------------
+# 8-bit moments
+# ----------------------------------------------------------------------
+def test_q8_matches_fp32_trajectory():
+    params = {"w": jnp.array([[3.0, -2.0, 1.0, 4.0]] * 2)}
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+    p32, s32 = params, init_opt(params)
+    pq8, sq8 = params, init_opt_q8(params)
+    for _ in range(100):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(p32)
+        p32, s32, _ = apply_updates(cfg, p32, g, s32)
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(pq8)
+        pq8, sq8, _ = apply_updates_q8(cfg, pq8, g, sq8)
+    # both converge to ~0; trajectories agree loosely
+    assert float(jnp.abs(p32["w"]).max()) < 0.05
+    assert float(jnp.abs(pq8["w"]).max()) < 0.05
+
+
+def test_q8_state_is_4x_smaller():
+    params = {"w": jnp.zeros((1024, 1024), jnp.bfloat16)}
+    b32 = sum(x.size * x.dtype.itemsize
+              for x in jax.tree.leaves(init_opt(params)))
+    bq8 = sum(x.size * x.dtype.itemsize
+              for x in jax.tree.leaves(init_opt_q8(params)))
+    assert b32 / bq8 > 3.9
+
+
+def test_q8_trains_real_lm():
+    from repro.data import SyntheticLM
+    from repro.models import build_model
+    from repro.train import TrainStepConfig, make_train_step
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        model, AdamWConfig(lr=1e-3),
+        TrainStepConfig(remat="none", quantized_moments=True,
+                        total_steps=40)))
+    opt = init_opt_q8(params)
+    src = SyntheticLM(vocab=cfg.vocab, seed=5)
+    losses = []
+    for i in range(30):
+        b = src.batch(step=i, shard=0, n_shards=1, batch=8, seq=32)
+        params, opt, m = step(params, opt,
+                              {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.02

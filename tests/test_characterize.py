@@ -1,0 +1,82 @@
+"""Algorithm 1 (component characterization) + the lambda-constraint Eq. 1."""
+
+import pytest
+
+from repro.core import (CDFGFacts, CountingTool, KnobSpace,
+                        characterize_component)
+from repro.core.hlsim import ComponentSpec, HLSTool, LoopNest
+
+
+def test_eq1_paper_example_1():
+    """Fig. 6: gamma_r=1, gamma_w=1, eta=1, ports=2:
+    h_2(2) = 3 and h_2(3) = 4."""
+    facts = CDFGFacts(gamma_r=1, gamma_w=1, eta=1, trip=100)
+    assert facts.h(2, 2) == 3
+    assert facts.h(3, 2) == 4
+
+
+def _tool(noise=0.0):
+    spec = ComponentSpec(
+        "c", LoopNest(trip=4096, gamma_r=4, gamma_w=2, arith_ops=12,
+                      dep_depth=4, live_values=10),
+        words_in=8192, words_out=4096)
+    return CountingTool(HLSTool({"c": spec}, noise=noise))
+
+
+def test_regions_structure():
+    tool = _tool()
+    res = characterize_component(
+        tool, "c", KnobSpace(clock_ns=1.0, max_ports=8, max_unrolls=16))
+    assert len(res.regions) >= 2
+    for r in res.regions:
+        # corners: upper-left is faster but larger (or degenerate)
+        assert r.lam_min <= r.lam_max
+        assert r.area_min <= r.area_max + 1e-12
+        assert r.mu_min == max(1, r.ports)      # line 3 of Algorithm 1
+        assert r.mu_max >= r.mu_min
+    # ports are powers of two, increasing
+    ports = [r.ports for r in res.regions]
+    assert ports == sorted(ports)
+    assert all(p & (p - 1) == 0 for p in ports)
+
+
+def test_more_ports_faster_regions():
+    """Each kept region's fast corner must improve on the previous
+    (pruning drops port counts with no latency gain, Section 7.2)."""
+    tool = _tool()
+    res = characterize_component(
+        tool, "c", KnobSpace(clock_ns=1.0, max_ports=16, max_unrolls=32))
+    lam_mins = [r.lam_min for r in res.regions]
+    assert all(a > b for a, b in zip(lam_mins, lam_mins[1:]))
+
+
+def test_lambda_constraint_discards_count_as_invocations():
+    tool = _tool(noise=2.0)      # aggressive heuristic noise
+    res = characterize_component(
+        tool, "c", KnobSpace(clock_ns=1.0, max_ports=4, max_unrolls=24))
+    # failed syntheses are counted (Fig. 11 includes them)
+    assert res.invocations >= 2 * len(res.regions)
+    assert res.failed == tool.failed.get("c", 0)
+
+
+def test_invocation_cache():
+    """Same knobs are never synthesized twice (Section 7.3)."""
+    tool = _tool()
+    space = KnobSpace(clock_ns=1.0, max_ports=4, max_unrolls=8)
+    characterize_component(tool, "c", space)
+    n1 = tool.total("c")
+    characterize_component(tool, "c", space)   # all cache hits
+    assert tool.total("c") == n1
+
+
+def test_spans_grow_with_memory_codesign():
+    """Ports in the DSE (COSMOS) vs dual-port only (No Memory): Table 1's
+    headline — the co-design spans dominate."""
+    tool1, tool2 = _tool(), _tool()
+    full = characterize_component(
+        tool1, "c", KnobSpace(clock_ns=1.0, max_ports=16, max_unrolls=32))
+    dual = characterize_component(
+        tool2, "c", KnobSpace(clock_ns=1.0, min_ports=2, max_ports=2,
+                              max_unrolls=32))
+    assert full.lam_span > dual.lam_span
+    assert full.area_span > dual.area_span

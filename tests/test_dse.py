@@ -1,0 +1,78 @@
+"""Full COSMOS vs exhaustive: front quality + invocation reduction."""
+
+import pytest
+
+from repro.core import (CountingTool, HLSTool, KnobSpace, compose_exhaustive,
+                        cosmos_dse, exhaustive_dse, pareto_front_max_min,
+                        pipeline_tmg)
+from repro.core.hlsim import ComponentSpec, LoopNest
+
+
+def _system():
+    specs = {
+        "a": ComponentSpec("a", LoopNest(256, 2, 1, 8, 3, 6), 1024, 1024),
+        "b": ComponentSpec("b", LoopNest(512, 4, 2, 16, 5, 10), 2048, 1024),
+        "c": ComponentSpec("c", LoopNest(128, 1, 1, 4, 2, 4), 512, 512),
+    }
+    tool = HLSTool(specs)
+    tmg = pipeline_tmg(list(specs), buffers=2)
+    spaces = {n: KnobSpace(clock_ns=1.0, max_ports=8, max_unrolls=16)
+              for n in specs}
+    return specs, tool, tmg, spaces
+
+
+def test_cosmos_beats_exhaustive_on_invocations():
+    specs, tool, tmg, spaces = _system()
+    res = cosmos_dse(tmg, tool, spaces, delta=0.3)
+    ex = exhaustive_dse(list(specs), HLSTool(dict(
+        (n, specs[n]) for n in specs)), spaces)
+    assert ex.total_invocations > 2.5 * res.total_invocations
+
+
+def test_extreme_points_match_exhaustive():
+    """At theta_min / theta_max the mapped points must coincide with the
+    exhaustive front's extreme points."""
+    specs, tool, tmg, spaces = _system()
+    res = cosmos_dse(tmg, tool, spaces, delta=0.3)
+    ex = exhaustive_dse(list(specs), HLSTool(dict(specs)), spaces)
+    front = compose_exhaustive(tmg, ex.fronts)
+    lo_ex, hi_ex = front[0], front[-1]
+    mapped = sorted(res.mapped, key=lambda m: m.theta_actual)
+    assert mapped[0].theta_actual == pytest.approx(lo_ex.perf, rel=1e-6)
+    assert mapped[-1].theta_actual == pytest.approx(hi_ex.perf, rel=1e-6)
+
+
+def test_mapped_points_near_exhaustive_front():
+    """Every COSMOS point must be within a bounded factor of the true
+    front's cost at >= its throughput (quality guarantee in practice)."""
+    specs, tool, tmg, spaces = _system()
+    res = cosmos_dse(tmg, tool, spaces, delta=0.3)
+    ex = exhaustive_dse(list(specs), HLSTool(dict(specs)), spaces)
+    front = compose_exhaustive(tmg, ex.fronts)
+    for m in res.pareto():
+        # cheapest exhaustive point at >= this throughput
+        cands = [p.cost for p in front if p.perf >= m.perf * (1 - 1e-9)]
+        if not cands:
+            continue
+        assert m.cost <= min(cands) * 1.6
+
+
+def test_mapped_theta_meets_plan():
+    """Mapping is conservative: actual throughput >= planned (the paper
+    trades area to preserve throughput)."""
+    specs, tool, tmg, spaces = _system()
+    res = cosmos_dse(tmg, tool, spaces, delta=0.3)
+    for m in res.mapped:
+        assert m.theta_actual >= m.theta_planned * (1 - 0.02)
+
+
+def test_fixed_software_component():
+    """Matrix-Inv-style fixed transitions join the TMG but are never
+    synthesized."""
+    specs, tool, tmg0, spaces = _system()
+    from repro.core import TMG, Place, Transition
+    names = list(specs) + ["sw"]
+    tmg = pipeline_tmg(names, buffers=2)
+    res = cosmos_dse(tmg, tool, spaces, delta=0.5, fixed={"sw": 1e-4})
+    assert "sw" not in res.invocations
+    assert "sw" not in res.characterizations

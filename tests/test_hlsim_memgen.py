@@ -1,0 +1,85 @@
+"""Simulated HLS tool + memory generator behaviour (DESIGN.md Section 2)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MemGen, PLMSpec
+from repro.core.hlsim import ComponentSpec, HLSTool, LoopNest
+
+
+def _spec(**kw):
+    d = dict(trip=1024, gamma_r=4, gamma_w=2, arith_ops=16, dep_depth=4,
+             live_values=8)
+    d.update(kw)
+    return ComponentSpec("c", LoopNest(**d), words_in=4096, words_out=4096)
+
+
+def test_determinism():
+    t1 = HLSTool({"c": _spec()})
+    t2 = HLSTool({"c": _spec()})
+    a = t1.synthesize("c", unrolls=8, ports=4)
+    b = t2.synthesize("c", unrolls=8, ports=4)
+    assert (a.lam, a.area, a.states_per_iter) == (b.lam, b.area, b.states_per_iter)
+
+
+def test_ports_reduce_latency_increase_area():
+    tool = HLSTool({"c": _spec()}, noise=0.0)
+    s1 = tool.synthesize("c", unrolls=8, ports=1)
+    s8 = tool.synthesize("c", unrolls=8, ports=8)
+    assert s8.lam < s1.lam
+    assert s8.area > s1.area
+
+
+def test_unrolls_diminishing_returns():
+    """lam(u) improvements shrink with u (the Amdahl shape behind phi)."""
+    tool = HLSTool({"c": _spec()}, noise=0.0)
+    lams = [tool.synthesize("c", unrolls=u, ports=4).lam
+            for u in (4, 8, 16, 32)]
+    gains = [a - b for a, b in zip(lams, lams[1:])]
+    assert all(g >= -1e-12 for g in gains)
+    assert gains[0] > gains[-1]
+
+
+def test_max_states_enforced():
+    tool = HLSTool({"c": _spec()}, noise=0.0)
+    free = tool.synthesize("c", unrolls=16, ports=2)
+    capped = tool.synthesize("c", unrolls=16, ports=2,
+                             max_states=free.states_per_iter - 1)
+    assert not capped.feasible
+    ok = tool.synthesize("c", unrolls=16, ports=2,
+                         max_states=free.states_per_iter)
+    assert ok.feasible
+
+
+def test_plm_dominates_area():
+    """Memory is 40-90% of accelerator area (paper Section 2.1)."""
+    tool = HLSTool({"c": _spec()}, noise=0.0)
+    s = tool.synthesize("c", unrolls=4, ports=4)
+    frac = s.detail["area_plm"] / s.area
+    assert 0.4 <= frac <= 0.95
+
+
+def test_memgen_banks_power_of_two():
+    gen = MemGen()
+    for ports in (1, 2, 3, 4, 6, 8, 16):
+        plm = gen.generate(PLMSpec(words=8192, word_bits=32, ports=ports))
+        assert plm.banks & (plm.banks - 1) == 0
+        assert plm.banks >= -(-ports // 2)   # ceil(ports/2) dual-ported
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(256, 65536), st.sampled_from([1, 2, 4, 8, 16]))
+def test_memgen_area_monotone_in_ports(words, ports):
+    gen = MemGen()
+    a1 = gen.generate(PLMSpec(words=words, word_bits=32, ports=ports)).area
+    a2 = gen.generate(PLMSpec(words=words, word_bits=32, ports=ports * 2)).area
+    assert a2 >= a1
+
+
+def test_cdfg_facts_roundtrip():
+    tool = HLSTool({"c": _spec()}, noise=0.0)
+    lr = tool.synthesize("c", unrolls=4, ports=4)
+    facts = tool.cdfg_facts("c", lr)
+    assert facts.gamma_r == 4 and facts.gamma_w == 2
+    # Eq. 1 must be an upper bound at the lower-right point itself
+    assert facts.h(lr.unrolls, lr.ports) >= lr.states_per_iter

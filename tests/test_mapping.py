@@ -1,0 +1,94 @@
+"""Synthesis mapping phi (Eqs. 4-5) — including the paper's own example."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CDFGFacts, CountingTool, Region, map_target, phi)
+from repro.core.hlsim import ComponentSpec, HLSTool, LoopNest
+
+
+def test_paper_example_2():
+    """Fig. 7: lam_max=40s, lam_min=10s, mu_min=1, mu_max=30;
+    lam_target=20s must map to 11 unrolls (after ceiling)."""
+    mu = phi(20.0, 10.0, 40.0, 1, 30)
+    assert math.ceil(mu) == 11
+
+
+def test_phi_endpoints():
+    assert phi(40.0, 10.0, 40.0, 1, 30) == pytest.approx(1.0)
+    assert phi(10.0, 10.0, 40.0, 1, 30) == pytest.approx(30.0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(1.0, 50.0), st.floats(51.0, 500.0),
+       st.integers(1, 8), st.integers(9, 64))
+def test_phi_monotone_decreasing(lam_min, lam_max, mu_min, mu_max):
+    """More aggressive latency targets need more unrolls."""
+    lams = [lam_min + (lam_max - lam_min) * f for f in (0.1, 0.4, 0.7, 1.0)]
+    mus = [phi(l, lam_min, lam_max, mu_min, mu_max) for l in lams]
+    for a, b in zip(mus, mus[1:]):
+        assert a >= b - 1e-9
+    assert all(mu_min - 1e-9 <= m <= mu_max + 1e-9 for m in mus)
+
+
+def _tool():
+    spec = ComponentSpec(
+        "c", LoopNest(trip=1024, gamma_r=2, gamma_w=1, arith_ops=8,
+                      dep_depth=3, live_values=8),
+        words_in=2048, words_out=2048)
+    return CountingTool(HLSTool({"c": spec}, noise=0.0))
+
+
+def _regions(tool):
+    from repro.core import KnobSpace, characterize_component
+    return characterize_component(tool, "c",
+                                  KnobSpace(clock_ns=1.0, max_ports=4,
+                                            max_unrolls=16)).regions
+
+
+def test_map_inside_region_meets_target():
+    tool = _tool()
+    regions = _regions(tool)
+    r = regions[0]
+    lam_target = (r.lam_min + r.lam_max) / 2
+    out = map_target(tool, "c", regions, lam_target)
+    assert out.synthesis.feasible
+    assert out.synthesis.lam <= lam_target * 1.0 + 1e-12
+
+
+def test_map_gap_falls_to_next_region():
+    tool = _tool()
+    regions = _regions(tool)
+    assert len(regions) >= 2
+    slow = sorted(regions, key=lambda r: r.lam_max, reverse=True)
+    gap_lo = slow[1].lam_max          # fastest corner of next region
+    gap_hi = slow[0].lam_min          # slowest corner of first region
+    if gap_lo < gap_hi:               # a real gap exists
+        lam_target = (gap_lo + gap_hi) / 2
+        out = map_target(tool, "c", regions, lam_target)
+        assert out.fallback == "next-region"
+        # conservative: trades area to preserve throughput
+        assert out.synthesis.lam <= lam_target
+
+
+def test_map_extremes():
+    tool = _tool()
+    regions = _regions(tool)
+    out_slow = map_target(tool, "c", regions, 1e9)
+    assert out_slow.fallback in ("", "slowest")
+    out_fast = map_target(tool, "c", regions, 1e-12)
+    assert out_fast.fallback == "fastest"
+
+
+def test_mapping_reuses_characterized_points():
+    """The next-region fallback must be a cache hit (no new invocation)."""
+    tool = _tool()
+    regions = _regions(tool)
+    before = tool.total("c")
+    slow = sorted(regions, key=lambda r: r.lam_max, reverse=True)
+    if len(slow) >= 2 and slow[1].lam_max < slow[0].lam_min:
+        lam_target = (slow[1].lam_max + slow[0].lam_min) / 2
+        map_target(tool, "c", regions, lam_target)
+        assert tool.total("c") == before  # cache hit

@@ -1,0 +1,73 @@
+"""Pareto utilities + hypothesis invariants."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DesignPoint, check_delta_curve, pareto_front_max_min,
+                        pareto_front_min_min, span)
+
+pts = st.lists(
+    st.tuples(st.floats(0.1, 100), st.floats(0.1, 100)).map(
+        lambda t: DesignPoint(perf=t[0], cost=t[1])),
+    min_size=1, max_size=40)
+
+
+def test_front_basic():
+    p = [DesignPoint(1, 10), DesignPoint(2, 5), DesignPoint(3, 1),
+         DesignPoint(3, 2), DesignPoint(0.5, 20)]
+    front = pareto_front_min_min(p)
+    assert DesignPoint(3, 2) not in front
+    assert DesignPoint(3, 1) in front
+    assert DesignPoint(1, 10) in front
+
+
+def test_span():
+    assert span([1.0, 2.0, 4.0]) == pytest.approx(4.0)
+    assert span([]) == 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(pts)
+def test_front_members_not_dominated(points):
+    front = pareto_front_min_min(points)
+    for f in front:
+        dominated = any(
+            (q.perf <= f.perf and q.cost <= f.cost)
+            and (q.perf < f.perf or q.cost < f.cost) for q in points)
+        assert not dominated
+
+
+@settings(max_examples=100, deadline=None)
+@given(pts)
+def test_every_point_dominated_by_front_or_in_it(points):
+    front = pareto_front_min_min(points)
+    fkeys = {(f.perf, f.cost) for f in front}
+    for p in points:
+        ok = (p.perf, p.cost) in fkeys or any(
+            f.perf <= p.perf and f.cost <= p.cost for f in front)
+        assert ok
+
+
+@settings(max_examples=100, deadline=None)
+@given(pts)
+def test_front_idempotent(points):
+    f1 = pareto_front_min_min(points)
+    assert pareto_front_min_min(f1) == f1
+
+
+@settings(max_examples=50, deadline=None)
+@given(pts)
+def test_max_min_front_sorted_tradeoff(points):
+    """Along a (theta up, cost down) front, cost must rise with perf."""
+    front = pareto_front_max_min(points)
+    for a, b in zip(front, front[1:]):
+        assert b.perf > a.perf
+        assert b.cost > a.cost
+
+
+def test_delta_curve():
+    close = [DesignPoint(1.0, 1.0), DesignPoint(1.1, 1.05),
+             DesignPoint(1.2, 1.12)]
+    assert check_delta_curve(close, delta=0.25)
+    gappy = [DesignPoint(1.0, 1.0), DesignPoint(5.0, 1.01)]
+    assert not check_delta_curve(gappy, delta=0.25)

@@ -1,0 +1,95 @@
+"""Eq. 2 LP synthesis planning: envelope, feasibility, optimality."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ComponentModel, PiecewiseLinearCost, plan,
+                        pipeline_tmg, sweep, theta_bounds)
+from repro.core.planning import _simplex
+
+
+def test_convex_envelope():
+    pts = [(1.0, 10.0), (2.0, 4.0), (3.0, 3.5), (4.0, 1.0), (2.5, 9.0)]
+    f = PiecewiseLinearCost.from_points(pts)
+    # envelope is below all points and convex
+    for x, y in pts:
+        assert f(x) <= y + 1e-9
+    xs = np.linspace(1.0, 4.0, 50)
+    ys = [f(x) for x in xs]
+    # convexity: second differences non-negative
+    d2 = np.diff(ys, 2)
+    assert np.all(d2 >= -1e-6)
+
+
+def _models():
+    mk = PiecewiseLinearCost.from_points
+    return {
+        "a": ComponentModel("a", 1.0, 4.0, mk([(1.0, 8.0), (4.0, 2.0)])),
+        "b": ComponentModel("b", 2.0, 6.0, mk([(2.0, 9.0), (6.0, 3.0)])),
+        "c": ComponentModel("c", 1.0, 3.0, mk([(1.0, 5.0), (3.0, 1.0)])),
+    }
+
+
+def test_plan_at_theta_min_picks_cheapest():
+    tmg = pipeline_tmg(["a", "b", "c"], buffers=2)
+    models = _models()
+    th_lo, th_hi = theta_bounds(tmg, models)
+    pt = plan(tmg, models, th_lo)
+    assert pt is not None
+    # at the loosest throughput, every component sits at lam_max (cheapest)
+    for n, m in models.items():
+        assert pt.lam_targets[n] == pytest.approx(m.lam_max, rel=1e-6)
+
+
+def test_plan_at_theta_max_feasible_and_fast():
+    tmg = pipeline_tmg(["a", "b", "c"], buffers=2)
+    models = _models()
+    _, th_hi = theta_bounds(tmg, models)
+    pt = plan(tmg, models, th_hi)
+    assert pt is not None
+    # the critical component must be at its fastest point
+    assert min(pt.lam_targets.values()) >= 0
+
+
+def test_planned_assignment_achieves_theta():
+    """LP feasibility must imply the TMG sustains the target theta."""
+    tmg = pipeline_tmg(["a", "b", "c"], buffers=2)
+    models = _models()
+    th_lo, th_hi = theta_bounds(tmg, models)
+    for theta in np.linspace(th_lo, th_hi, 6):
+        pt = plan(tmg, models, float(theta))
+        assert pt is not None
+        achieved = tmg.throughput(pt.lam_targets)
+        assert achieved >= theta * (1 - 1e-6)
+
+
+def test_cost_monotone_in_theta():
+    """Tighter throughput targets can only cost more (LP optimality)."""
+    tmg = pipeline_tmg(["a", "b", "c"], buffers=2)
+    models = _models()
+    points = sweep(tmg, models, delta=0.3)
+    costs = [p.cost for p in points]
+    assert all(b >= a - 1e-6 for a, b in zip(costs, costs[1:]))
+
+
+def test_sweep_ratio():
+    tmg = pipeline_tmg(["a", "b"], buffers=2)
+    models = {k: _models()[k] for k in ("a", "b")}
+    pts = sweep(tmg, models, delta=0.5)
+    for p, q in zip(pts, pts[1:-1]):
+        assert q.theta / p.theta == pytest.approx(1.5, rel=1e-6)
+
+
+def test_simplex_fallback_matches_scipy():
+    """The dependency-free simplex solves a small LP to the same optimum."""
+    # min x + y st x + 2y >= 4, 3x + y >= 6, 0 <= x,y <= 10
+    c = np.array([1.0, 1.0])
+    A_ub = np.array([[-1.0, -2.0], [-3.0, -1.0]])
+    b_ub = np.array([-4.0, -6.0])
+    bounds = [(0.0, 10.0), (0.0, 10.0)]
+    x = _simplex(c, A_ub, b_ub, bounds)
+    assert x is not None
+    from scipy.optimize import linprog
+    ref = linprog(c, A_ub=A_ub, b_ub=b_ub, bounds=bounds, method="highs")
+    assert c @ x == pytest.approx(ref.fun, rel=1e-6)

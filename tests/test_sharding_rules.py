@@ -1,0 +1,69 @@
+"""Sharding-rule resolution (structure-level; runs on 1 CPU device)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import ShardingRules, _resolve, lm_rules, tree_paths
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # trivial mesh: resolution logic is shape-independent of axis sizes
+    # except for divisibility, which a (1, 1) mesh never triggers.
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_resolve_basic(mesh):
+    assert _resolve(("data", None), mesh) == P("data", None)
+    assert _resolve(("model",), mesh) == P("model")
+    assert _resolve(("bogus", None), mesh) == P(None, None)
+
+
+def test_resolve_divisibility_guard():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # with axis size 1 everything divides; emulate a larger axis via the
+    # production mesh shape is covered in the dry-run — here check the
+    # 'None on mismatch' path using shape=0-free dims
+    assert _resolve(("data",), mesh, (7,)) == P("data")   # 7 % 1 == 0
+
+
+def test_lm_rules_paths(mesh):
+    rules = lm_rules("dense")
+    spec = rules.spec("embed", 2, mesh, (1024, 64))
+    assert spec.spec == P("model", None)
+    spec = rules.spec("layers/attn/wq", 3, mesh, (4, 64, 64))
+    assert spec.spec == P(None, None, "model")      # left-padded layer dim
+    spec = rules.spec("layers/mlp/w_down", 3, mesh, (4, 128, 64))
+    assert spec.spec == P(None, "model", None)
+    spec = rules.spec("final_norm/scale", 1, mesh, (64,))
+    assert spec.spec == P(None)
+
+
+def test_moe_2d_rules(mesh):
+    r1 = lm_rules("moe")
+    r2 = lm_rules("moe", two_d_experts=True)
+    s1 = r1.spec("layers/moe/w_gate", 4, mesh, (4, 8, 64, 64))
+    s2 = r2.spec("layers/moe/w_gate", 4, mesh, (4, 8, 64, 64))
+    assert s1.spec == P(None, "model", None, None)
+    assert s2.spec == P(None, "model", None, "data")
+
+
+def test_tree_paths_structure():
+    tree = {"a": {"b": jnp.zeros(2)}, "c": [jnp.zeros(1), jnp.zeros(1)]}
+    paths = tree_paths(tree)
+    assert paths["a"]["b"] == "a/b"
+    assert paths["c"][0] == "c/0"
+
+
+def test_rules_tree_covers_model_params(mesh):
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shardings = lm_rules("dense").tree(params, mesh)
+    # every leaf got a NamedSharding
+    n = len(jax.tree.leaves(shardings))
+    assert n == len(jax.tree.leaves(params))

@@ -1,0 +1,219 @@
+"""Substrate: optimizer, data, checkpoint, compression, fault tolerance."""
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step, list_steps,
+                              restore, save)
+from repro.data import DataPipeline, SyntheticLM
+from repro.dist import dequantize_blockwise, ef_compress, quantize_blockwise
+from repro.ft import StragglerDetector, Watchdog, largest_pow2_leq, replan
+from repro.optim import (AdamWConfig, apply_updates, clip_by_global_norm,
+                         global_norm, init_opt, warmup_cosine)
+
+
+# ----------------------------------------------------------------------
+# optimizer
+# ----------------------------------------------------------------------
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0]), "scale": jnp.array([2.0])}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=10.0)
+    state = init_opt(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2)
+                     + jnp.sum((p["scale"] - 1.0) ** 2))(params)
+        params, state, m = apply_updates(cfg, params, g, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+    assert float(jnp.abs(params["scale"] - 1.0).max()) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0, warmup=10, total=100)) == pytest.approx(0.0)
+    assert float(warmup_cosine(10, warmup=10, total=100)) == pytest.approx(1.0)
+    assert float(warmup_cosine(100, warmup=10, total=100)) == pytest.approx(0.1)
+
+
+# ----------------------------------------------------------------------
+# data
+# ----------------------------------------------------------------------
+def test_synthetic_deterministic_and_seekable():
+    src = SyntheticLM(vocab=1000, seed=3)
+    b1 = src.batch(step=7, shard=0, n_shards=2, batch=4, seq=16)
+    b2 = src.batch(step=7, shard=0, n_shards=2, batch=4, seq=16)
+    b3 = src.batch(step=8, shard=0, n_shards=2, batch=4, seq=16)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # shards differ
+    b4 = src.batch(step=7, shard=1, n_shards=2, batch=4, seq=16)
+    assert not np.array_equal(b1["tokens"], b4["tokens"])
+    # targets are next tokens
+    assert np.array_equal(b1["targets"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_synthetic_has_structure():
+    """Markov structure => repeated bigrams far above uniform chance."""
+    src = SyntheticLM(vocab=50000, seed=0)
+    b = src.batch(step=0, shard=0, n_shards=1, batch=8, seq=512)
+    toks = b["tokens"]
+    bigrams = set()
+    repeats = 0
+    for row in toks:
+        for a, c in zip(row[:-1], row[1:]):
+            if (a, c) in bigrams:
+                repeats += 1
+            bigrams.add((a, c))
+    assert repeats > 10      # uniform 50k^2 space would give ~0
+
+
+def test_pipeline_prefetch_and_restart():
+    src = SyntheticLM(vocab=100, seed=1)
+    pipe = DataPipeline(src, global_batch=4, seq=8, prefetch=2)
+    first = [next(pipe)["tokens"] for _ in range(3)]
+    pipe.close()
+    pipe2 = DataPipeline(src, global_batch=4, seq=8, start_step=0)
+    again = [next(pipe2)["tokens"] for _ in range(3)]
+    pipe2.close()
+    for a, b in zip(first, again):
+        assert np.array_equal(a, b)
+
+
+# ----------------------------------------------------------------------
+# checkpoint
+# ----------------------------------------------------------------------
+def _tree():
+    return {"layer": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                      "b": np.zeros(3, np.float32)},
+            "step_count": np.int32(5)}
+
+
+def test_checkpoint_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 10, _tree(), extra={"data_step": 10})
+        out, extra = restore(d, 10, _tree())
+        assert extra == {"data_step": 10}
+        np.testing.assert_array_equal(out["layer"]["w"], _tree()["layer"]["w"])
+
+
+def test_checkpoint_atomicity_ignores_torn_tmp():
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, _tree())
+        # simulate a crash mid-write of step 2
+        os.makedirs(os.path.join(d, "step_00000002.tmp"))
+        assert latest_step(d) == 1
+        assert list_steps(d) == [1]
+
+
+def test_checkpoint_latest_pointer_fallback():
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, _tree())
+        save(d, 2, _tree())
+        os.remove(os.path.join(d, "LATEST"))
+        assert latest_step(d) == 2
+
+
+def test_checkpoint_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, _tree())
+        bad = _tree()
+        bad["layer"]["w"] = np.zeros((2, 2), np.float32)
+        with pytest.raises(ValueError):
+            restore(d, 1, bad)
+
+
+def test_async_checkpointer_gc():
+    with tempfile.TemporaryDirectory() as d:
+        with AsyncCheckpointer(d, keep_last=2) as ck:
+            for s in (1, 2, 3, 4):
+                ck.save_async(s, _tree())
+        assert list_steps(d) == [3, 4]
+
+
+# ----------------------------------------------------------------------
+# compression
+# ----------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 2000), st.integers(0, 5))
+def test_quantize_roundtrip_bounded(n, seed):
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
+    q, s = quantize_blockwise(jnp.asarray(x))
+    y = np.asarray(dequantize_blockwise(q, s, (n,)))
+    blk_max = np.abs(x).max() if n else 0.0
+    assert np.abs(x - y).max() <= blk_max / 127 * 1.01 + 1e-9
+
+
+def test_error_feedback_identity():
+    g = jax.random.normal(jax.random.PRNGKey(0), (513,))
+    gh, err = ef_compress(g)
+    assert float(jnp.abs((gh + err) - g).max()) < 1e-6
+
+
+def test_error_feedback_converges():
+    """EF compression preserves the long-run gradient sum."""
+    gs = [jax.random.normal(jax.random.PRNGKey(i), (256,)) * 0.1
+          for i in range(50)]
+    err = jnp.zeros(256)
+    total_hat = jnp.zeros(256)
+    for g in gs:
+        gh, err = ef_compress(g, err)
+        total_hat += gh
+    total = sum(gs)
+    assert float(jnp.abs(total_hat + err - total).max()) < 1e-4
+
+
+# ----------------------------------------------------------------------
+# fault tolerance
+# ----------------------------------------------------------------------
+def test_straggler_detector():
+    det = StragglerDetector(4, patience=2)
+    for _ in range(4):
+        rep = det.update([1.0, 1.0, 1.0, 3.0])
+    assert rep.flagged == [3]
+    det2 = StragglerDetector(4, patience=2)
+    rep = det2.update([1.0, 1.0, 1.0, 3.0])   # one strike only
+    assert rep.flagged == []
+
+
+def test_watchdog_fires_and_recovers():
+    events = []
+    wd = Watchdog(timeout_s=0.15, poll_s=0.02,
+                  on_stall=lambda step, gap: events.append(step))
+    wd.beat(1)
+    time.sleep(0.4)
+    assert wd.stalled and events == [1]
+    wd.beat(2)
+    assert not wd.stalled
+    wd.close()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 512))
+def test_elastic_plan_properties(surviving):
+    plan = replan((2, 16, 16), ("pod", "data", "model"), surviving)
+    used = 1
+    for s in plan.new_shape:
+        used *= s
+    assert used <= surviving
+    assert used == largest_pow2_leq(surviving)
+    assert all(s >= 1 for s in plan.new_shape)
+
+
+def test_elastic_keeps_tp_when_possible():
+    plan = replan((16, 16), ("data", "model"), 255)
+    assert plan.new_shape == (8, 16)
+    assert not plan.needs_resharding
+    plan2 = replan((16, 16), ("data", "model"), 8)
+    assert plan2.needs_resharding

@@ -1,0 +1,96 @@
+"""TMG model: cycle time, throughput, incidence (paper Section 2.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TMG, Place, Transition, pipeline_tmg
+
+
+def simple_loop(delays, tokens=1):
+    names = list(delays)
+    ts = [Transition(n) for n in names]
+    places = [Place(f"p{i}", names[i], names[(i + 1) % len(names)],
+                    tokens=(tokens if i == len(names) - 1 else 0))
+              for i in range(len(names))]
+    return TMG(ts, places)
+
+
+def test_single_cycle_min_cycle_time():
+    tmg = simple_loop({"a": 0, "b": 0, "c": 0}, tokens=2)
+    delays = {"a": 3.0, "b": 5.0, "c": 2.0}
+    # one cycle: D = 10, N = 2
+    assert tmg.min_cycle_time(delays) == pytest.approx(5.0)
+    assert tmg.throughput(delays) == pytest.approx(0.2)
+
+
+def test_zero_token_cycle_deadlocks():
+    tmg = simple_loop({"a": 0, "b": 0}, tokens=0)
+    assert tmg.min_cycle_time({"a": 1.0, "b": 1.0}) == float("inf")
+    assert tmg.throughput({"a": 1.0, "b": 1.0}) == 0.0 or \
+        tmg.throughput({"a": 1.0, "b": 1.0}) == pytest.approx(0.0)
+
+
+def test_pipeline_ping_pong_overlap():
+    """With 2-token capacity places, a pipeline sustains 1/max(lam)
+    (Fig. 3's overlapped execution); with 1 token adjacent stages
+    serialize."""
+    names = ["s1", "s2", "s3"]
+    delays = {"s1": 2.0, "s2": 5.0, "s3": 3.0}
+    fast = pipeline_tmg(names, buffers=2)
+    slow = pipeline_tmg(names, buffers=1)
+    th_fast = fast.throughput(delays)
+    th_slow = slow.throughput(delays)
+    assert th_fast == pytest.approx(1.0 / 5.0)
+    assert th_slow == pytest.approx(1.0 / 8.0)  # s2+s3 serialize
+    assert th_fast > th_slow
+
+
+def test_incidence_matrix_signs():
+    tmg = simple_loop({"a": 0, "b": 0}, tokens=1)
+    A = tmg.incidence_matrix()
+    B = tmg.input_delay_selector()
+    # each place row: +1 for consumer, -1 for producer
+    assert A.shape == (2, 2)
+    assert np.all(A.sum(axis=1) == 0)
+    assert np.all(B.sum(axis=1) == 1)
+
+
+def test_strongly_connected():
+    tmg = simple_loop({"a": 0, "b": 0}, tokens=1)
+    assert tmg.strongly_connected()
+    ts = [Transition("a"), Transition("b")]
+    open_tmg = TMG(ts, [Place("p", "a", "b", 1)])
+    assert not open_tmg.strongly_connected()
+
+
+def test_criticality_sums_to_one():
+    tmg = pipeline_tmg(["a", "b", "c"], buffers=2)
+    crit = tmg.criticality({"a": 1.0, "b": 10.0, "c": 1.0})
+    assert sum(crit.values()) == pytest.approx(1.0)
+    assert max(crit, key=crit.get) == "b"
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=6),
+       st.integers(1, 4))
+def test_throughput_scaling_property(delays, tokens):
+    """theta(c * lam) == theta(lam) / c for any positive scale c."""
+    names = [f"t{i}" for i in range(len(delays))]
+    tmg = simple_loop(dict.fromkeys(names, 0), tokens=tokens)
+    d1 = dict(zip(names, delays))
+    d2 = {k: 2.0 * v for k, v in d1.items()}
+    th1, th2 = tmg.throughput(d1), tmg.throughput(d2)
+    assert th2 == pytest.approx(th1 / 2.0, rel=1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=5))
+def test_throughput_monotone_in_delays(delays):
+    """Increasing any latency can never increase throughput."""
+    names = [f"t{i}" for i in range(len(delays))]
+    tmg = pipeline_tmg(names, buffers=2)
+    d1 = dict(zip(names, delays))
+    d2 = dict(d1)
+    d2[names[0]] *= 3.0
+    assert tmg.throughput(d2) <= tmg.throughput(d1) + 1e-12

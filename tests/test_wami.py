@@ -1,0 +1,106 @@
+"""WAMI components: functional goldens + the end-to-end LK pipeline."""
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.signal as jsig
+import numpy as np
+import pytest
+
+from repro.apps.wami import (FRAME, build_components, change_detection,
+                             debayer, gradient, grayscale, hessian,
+                             lucas_kanade, matrix_invert, sd_update,
+                             steepest_descent, wami_app, wami_tmg,
+                             warp_affine)
+
+
+@pytest.fixture(scope="module")
+def img():
+    key = jax.random.PRNGKey(0)
+    raw = jax.random.uniform(key, (64, 64), jnp.float32)
+    k = jnp.ones((5, 5)) / 25.0
+    return jsig.convolve2d(raw, k, mode="same") * 100.0
+
+
+def test_debayer_constant_image():
+    out = debayer(jnp.full((16, 16), 77.0))
+    assert out.shape == (16, 16, 3)
+    assert float(jnp.abs(out - 77.0).max()) < 1e-4
+
+
+def test_grayscale_weights():
+    rgb = jnp.stack([jnp.full((4, 4), 1.0), jnp.zeros((4, 4)),
+                     jnp.zeros((4, 4))], -1)
+    assert float(grayscale(rgb)[0, 0]) == pytest.approx(0.299)
+
+
+def test_gradient_of_ramp():
+    yy, xx = jnp.meshgrid(jnp.arange(32.0), jnp.arange(32.0), indexing="ij")
+    gx, gy = gradient(3 * xx + 7 * yy)
+    assert float(gx[5:-5, 5:-5].mean()) == pytest.approx(3.0, rel=1e-5)
+    assert float(gy[5:-5, 5:-5].mean()) == pytest.approx(7.0, rel=1e-5)
+
+
+def test_warp_identity_and_shift(img):
+    assert float(jnp.abs(warp_affine(img, jnp.zeros(6)) - img).max()) < 1e-4
+    shifted = warp_affine(img, jnp.array([0, 0, 1.0, 0, 0, 0]))  # x' = x+1
+    assert float(jnp.abs(shifted[:, :-1] - img[:, 1:]).max()) < 1e-3
+
+
+def test_hessian_psd(img):
+    gx, gy = gradient(img)
+    H = hessian(steepest_descent(gx, gy))
+    assert H.shape == (6, 6)
+    assert float(jnp.abs(H - H.T).max()) < 1e-2 * float(jnp.abs(H).max())
+    eig = jnp.linalg.eigvalsh(H)
+    assert float(eig.min()) >= -1e-3 * float(eig.max())
+
+
+def test_matrix_invert(img):
+    A = jax.random.normal(jax.random.PRNGKey(1), (6, 6)) + 6 * jnp.eye(6)
+    assert float(jnp.abs(matrix_invert(A) @ A - jnp.eye(6)).max()) < 1e-3
+
+
+def test_lucas_kanade_recovers_affine(img):
+    p_true = jnp.array([0.01, -0.005, 0.8, 0.004, 0.008, -0.5], jnp.float32)
+    moved = warp_affine(img, p_true)
+    p_est = lucas_kanade(moved, img, n_iters=30)
+    assert float(jnp.abs(p_est - p_true).max()) < 1e-3
+
+
+def test_change_detection_flags_changes(img):
+    mu = jnp.repeat(img[..., None], 3, -1)
+    var = jnp.full(img.shape + (3,), 36.0)
+    w = jnp.full(img.shape + (3,), 1 / 3)
+    # unchanged frame -> almost no foreground
+    mask0, *_ = change_detection(img, mu, var, w)
+    assert float(mask0.mean()) < 0.05
+    # a bright square appears
+    changed = img.at[20:30, 20:30].add(200.0)
+    mask1, *_ = change_detection(changed, mu, var, w)
+    assert float(mask1[20:30, 20:30].mean()) > 0.9
+
+
+def test_wami_app_end_to_end(img):
+    frames = jnp.stack([img, img, img.at[10:20, 10:20].add(150.0)])
+    masks, ps = wami_app(frames, n_iters=4)
+    assert masks.shape == (2, 64, 64)
+    assert float(masks[0].mean()) < 0.1          # static frame: clean
+    assert float(masks[1][10:20, 10:20].mean()) > 0.5
+
+
+def test_wami_tmg_structure():
+    tmg = wami_tmg()
+    assert tmg.strongly_connected()
+    assert tmg.n == 13
+    delays = {t.name: 1.0 for t in tmg.transitions}
+    assert 0 < tmg.throughput(delays) < float("inf")
+
+
+def test_component_cdfg_extraction():
+    comps = build_components(tile=64, frame=128)
+    assert len(comps) == 12
+    ln = comps["gradient"].loop_nest()
+    assert ln.gamma_r == 5 and ln.gamma_w == 2      # 5-point stencil, 2 outs
+    ln = comps["grayscale"].loop_nest()
+    assert ln.gamma_r == 3 and ln.gamma_w == 1      # RGB in, luma out
+    assert comps["change_det"].loop_nest().gamma_r == 1  # register-cached

@@ -1,0 +1,58 @@
+"""The paper's WAMI experiment, as acceptance tests (Table 1 / Figs 10-11)."""
+
+import statistics
+
+import pytest
+
+from repro.apps.wami import (wami_cosmos, wami_exhaustive, wami_knob_spaces)
+from repro.apps.wami.pipeline import wami_cosmos_no_memory
+
+
+@pytest.fixture(scope="module")
+def cosmos():
+    return wami_cosmos(delta=0.25)
+
+
+@pytest.fixture(scope="module")
+def exhaustive():
+    return wami_exhaustive()
+
+
+def test_all_components_characterized(cosmos):
+    assert len(cosmos.characterizations) == 12   # matrix_inv is software
+
+
+def test_table1_memory_codesign_widens_spans(cosmos):
+    nm = wami_cosmos_no_memory(delta=0.25)
+    lam_c = statistics.mean(c.lam_span for c in cosmos.characterizations.values())
+    lam_n = statistics.mean(c.lam_span for c in nm.characterizations.values())
+    area_c = statistics.mean(c.area_span for c in cosmos.characterizations.values())
+    area_n = statistics.mean(c.area_span for c in nm.characterizations.values())
+    # paper: 4.06x vs 1.73x and 2.58x vs 1.22x — require the same ordering
+    # with comfortable margins
+    assert lam_c > 2.0 * lam_n
+    assert area_c > 1.2 * area_n
+
+
+def test_fig11_invocation_reduction(cosmos, exhaustive):
+    red = exhaustive.total_invocations / cosmos.total_invocations
+    assert red > 4.0            # paper: 6.7x average
+    per = [exhaustive.invocations[n] / max(1, cosmos.invocations.get(n, 1))
+           for n in exhaustive.invocations]
+    assert max(per) > 6.0       # paper: up to 14.6x
+
+
+def test_fig10_planned_vs_mapped(cosmos):
+    assert len(cosmos.mapped) >= 5
+    sigmas = [m.sigma_mismatch for m in cosmos.mapped]
+    # extremes must match tightly; the paper shows larger mid-curve sigmas
+    assert sigmas[0] < 0.05 and sigmas[-1] < 0.05
+    assert statistics.median(sigmas) < 0.25
+    # mapping is conservative on throughput
+    for m in cosmos.mapped:
+        assert m.theta_actual >= m.theta_planned * 0.98
+
+
+def test_exhaustive_composition_is_intractable(exhaustive):
+    # paper: > 9e12 combinations for WAMI
+    assert exhaustive.combinations() > 1e9

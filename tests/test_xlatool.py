@@ -1,0 +1,49 @@
+"""COSMOS over the XLA-priced oracle: full methodology on an ML pipeline."""
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core import (CountingTool, KnobSpace, cosmos_dse, pipeline_tmg)
+from repro.core.xlatool import XLATool
+
+
+@pytest.fixture(scope="module")
+def result():
+    # two-stage training system: a 9B dense stage and a 2.7B hybrid stage
+    # (multi-model pipeline, e.g. draft+target or distillation teacher)
+    comps = {
+        "gemma2": (get_config("gemma2-9b"), SHAPES[0]),
+        "zamba2": (get_config("zamba2-2.7b"), SHAPES[0]),
+    }
+    tool = XLATool(comps)
+    tmg = pipeline_tmg(list(comps), buffers=2)
+    spaces = {n: KnobSpace(clock_ns=1.0, max_ports=5, max_unrolls=8)
+              for n in comps}
+    return cosmos_dse(tmg, tool, spaces, delta=0.3)
+
+
+def test_characterization_finds_tp_regions(result):
+    for name, c in result.characterizations.items():
+        assert len(c.regions) >= 2, name
+        # more TP (ports) reaches faster lambda
+        lam_mins = [r.lam_min for r in c.regions]
+        assert lam_mins == sorted(lam_mins, reverse=True)
+
+
+def test_pareto_curve_exists(result):
+    assert len(result.mapped) >= 3
+    front = result.pareto()
+    assert len(front) >= 2
+    # throughput up the curve costs HBM
+    assert front[-1].cost > front[0].cost
+    assert front[-1].perf > front[0].perf
+
+
+def test_mapping_conservative_on_throughput(result):
+    for m in result.mapped:
+        assert m.theta_actual >= m.theta_planned * 0.98
+
+
+def test_invocations_frugal(result):
+    # exhaustive would price 5 ports x 8 unrolls = 40 per component
+    assert result.total_invocations < 2 * 40
