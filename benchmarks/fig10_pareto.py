@@ -10,7 +10,7 @@ from repro.apps.wami import wami_cosmos
 
 def run(report) -> None:
     t0 = time.time()
-    res = wami_cosmos(delta=0.25)
+    res = wami_cosmos(delta=0.25, workers=8)     # batched == sequential
     wall = time.time() - t0
 
     lines = ["# Fig. 10 — WAMI system Pareto: planned vs mapped",

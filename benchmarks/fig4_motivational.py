@@ -13,23 +13,26 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from repro.apps.wami import build_components
-from repro.core import CountingTool, HLSTool, span
+from repro.apps.wami import build_components, wami_knob_space
+from repro.core import InvocationRequest, HLSTool, OracleLedger, span
 from repro.kernels.wami_gradient import grid_steps, vmem_bytes
 
 
 def run(report) -> None:
     comps = build_components()
-    tool = CountingTool(HLSTool({"gradient": comps["gradient"].spec()}))
+    tool = OracleLedger(HLSTool({"gradient": comps["gradient"].spec()}),
+                        workers=8)
+    space = wami_knob_space("gradient")       # canonical Table-1 bounds
 
     t0 = time.time()
+    requests = [InvocationRequest("gradient", unrolls=unrolls, ports=ports)
+                for ports in space.ports()
+                for unrolls in range(max(1, ports), space.max_unrolls + 1)]
     rows: List[Dict] = []
-    for ports in (1, 2, 4, 8, 16):
-        for unrolls in range(max(1, ports), 33):
-            s = tool.synthesize("gradient", unrolls=unrolls, ports=ports)
-            if s.feasible:
-                rows.append({"ports": ports, "unrolls": unrolls,
-                             "lam_ms": s.lam * 1e3, "area_mm2": s.area})
+    for req, s in zip(requests, tool.evaluate_batch(requests)):
+        if s.feasible:
+            rows.append({"ports": req.ports, "unrolls": req.unrolls,
+                         "lam_ms": s.lam * 1e3, "area_mm2": s.area})
     wall = time.time() - t0
 
     all_lam = [r["lam_ms"] for r in rows]

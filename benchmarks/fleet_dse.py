@@ -26,8 +26,8 @@ def run(report) -> None:
     tmg = pipeline_tmg(list(comps), buffers=2)
     spaces = {n: KnobSpace(clock_ns=1.0, max_ports=5, max_unrolls=6)
               for n in comps}
-    res = cosmos_dse(tmg, tool, spaces, delta=0.3)
-    ex = exhaustive_dse(list(comps), XLATool(comps), spaces)
+    res = cosmos_dse(tmg, tool, spaces, delta=0.3, workers=4)
+    ex = exhaustive_dse(list(comps), XLATool(comps), spaces, workers=4)
     red = ex.total_invocations / max(1, res.total_invocations)
     wall = time.time() - t0
 

@@ -1,29 +1,40 @@
 """COSMOS-TPU in action: plan train knobs for every arch on the 256-chip
 pod, then replay an elastic event (lose 3 hosts) and re-plan — the
-paper's invocation-frugality argument applied to XLA compiles.
+paper's invocation-frugality argument applied to XLA.
 
-    PYTHONPATH=src python examples/autoshard.py
+All pricing runs through the same ``Oracle``/``OracleLedger`` protocol as
+the WAMI HLS exploration (examples/wami_dse.py): one shared ledger
+accounts every priced knob point across all stages, and a re-plan of an
+unchanged stage is a cache hit, not a new pricing.
+
+    PYTHONPATH=src python examples/autoshard.py       # or pip install -e .
 """
 
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import SHAPES, get_config, list_archs
-from repro.core.autotune import HBM_BYTES_PER_CHIP, choose_train_knobs
+from repro.core.autotune import (HBM_BYTES_PER_CHIP, XLAOracle,
+                                 choose_train_knobs)
+from repro.core.oracle import OracleLedger
 from repro.ft import replan
 
 
 def main():
     shape = SHAPES[0]  # train_4k
     mesh = {"data": 16, "model": 16}
+    ledger = OracleLedger(XLAOracle())     # one ledger for the whole fleet
     print(f"{'arch':24s} {'mb':>3s} {'remat':6s} {'accum':9s} "
           f"{'plan GB':>8s} fit")
     for arch in list_archs():
         cfg = get_config(arch)
-        p = choose_train_knobs(cfg, shape, mesh)
+        p = choose_train_knobs(cfg, shape, mesh, ledger=ledger)
         fit = "Y" if p.est_bytes <= HBM_BYTES_PER_CHIP else "N"
         print(f"{arch:24s} {p.microbatches:3d} {p.remat:6s} "
               f"{p.accum_dtype:9s} {p.est_bytes / 1e9:8.1f} {fit}")
+    n_priced = ledger.total()
+    print(f"-- {n_priced} priced invocations across "
+          f"{len(ledger.invocations)} stages (ladder walk, batched) --")
 
     print("\n-- elastic event: 12 chips lost on the multi-pod mesh --")
     plan = replan((2, 16, 16), ("pod", "data", "model"), 512 - 12)
@@ -32,10 +43,16 @@ def main():
           f"{'required' if plan.needs_resharding else 'NOT required'}: "
           f"{plan.note}")
     mesh2 = dict(zip(plan.axis_names, plan.new_shape))
-    p2 = choose_train_knobs(get_config("gemma2-9b"), shape, mesh2)
+    p2 = choose_train_knobs(get_config("gemma2-9b"), shape, mesh2,
+                            ledger=ledger)
     print(f"gemma2-9b re-planned: mb={p2.microbatches} remat={p2.remat} "
-          f"({p2.est_bytes / 1e9:.1f} GB/chip) — characterization reused, "
-          f"one compile to remap")
+          f"({p2.est_bytes / 1e9:.1f} GB/chip) — "
+          f"{ledger.total() - n_priced} new pricings, one compile to remap")
+    # planning the unchanged stage again costs nothing
+    before = ledger.total()
+    choose_train_knobs(get_config("gemma2-9b"), shape, mesh, ledger=ledger)
+    print(f"unchanged-stage re-plan: {ledger.total() - before} new "
+          f"invocations (cache)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
-"""Quickstart: build a zoo model, train a few steps, generate.
+"""Quickstart: build a zoo model, train a few steps, generate — then run
+a tiny COSMOS exploration through the batched ExplorationSession API.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .          # or: PYTHONPATH=src python examples/quickstart.py
+    python examples/quickstart.py
 """
 
 import sys, os
@@ -38,6 +40,26 @@ def main():
     prompt = jnp.asarray(b["tokens"][:2, :16])
     out = generate(model, params, {"tokens": prompt}, max_new=12)
     print("generated:", out.tolist()[0])
+
+    # ---- a 30-second COSMOS exploration (the paper's engine) ----------
+    from repro.core import (ExplorationSession, HLSTool, KnobSpace,
+                            pipeline_tmg)
+    from repro.core.hlsim import ComponentSpec, LoopNest
+    specs = {
+        "stage_a": ComponentSpec("stage_a",
+                                 LoopNest(256, 2, 1, 8, 3, 6), 1024, 1024),
+        "stage_b": ComponentSpec("stage_b",
+                                 LoopNest(128, 1, 1, 4, 2, 4), 512, 512),
+    }
+    session = ExplorationSession(
+        pipeline_tmg(list(specs), buffers=2), HLSTool(specs),
+        {n: KnobSpace(clock_ns=1.0, max_ports=4, max_unrolls=8)
+         for n in specs},
+        delta=0.3, workers=4)
+    res = session.run()
+    print(f"cosmos: {len(res.mapped)} mapped points from "
+          f"{res.total_invocations} oracle invocations "
+          f"(theta in [{res.theta_min:.0f}, {res.theta_max:.0f}] runs/s)")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,12 @@ accelerator — Table 1 spans, Fig. 10 Pareto curve, Fig. 11 invocations —
 plus a functional run of the accelerator itself (Lucas-Kanade alignment
 + change detection on synthetic frames).
 
-    PYTHONPATH=src python examples/wami_dse.py
+The DSE runs through the batched ``ExplorationSession`` API: all 12
+components characterize concurrently, all plan points map concurrently,
+and the results (fronts AND invocation counts) are identical to the
+sequential drive.
+
+    PYTHONPATH=src python examples/wami_dse.py        # or pip install -e .
 """
 
 import sys, os
@@ -14,7 +19,8 @@ import statistics
 import jax
 import jax.numpy as jnp
 
-from repro.apps.wami import wami_app, wami_cosmos, wami_exhaustive
+from repro.apps.wami import (WAMI_KNOB_TABLE, wami_app, wami_exhaustive,
+                             wami_session)
 from repro.apps.wami.pipeline import wami_cosmos_no_memory
 
 
@@ -30,15 +36,22 @@ def main():
           f"{float(masks[1][20:28, 20:28].mean()):.0%} inside, "
           f"{float(masks[1].mean()):.1%} overall")
 
-    # ---- the paper's DSE ------------------------------------------------
-    cos = wami_cosmos(delta=0.25)
+    # ---- the paper's DSE, batched through ExplorationSession -----------
+    def on_event(e):
+        if e.done in (0, e.total):
+            print(f"[session] {e.phase:12s} {e.done}/{e.total} {e.label}")
+
+    session = wami_session(delta=0.25, workers=8, on_event=on_event)
+    cos = session.run()
     nm = wami_cosmos_no_memory(delta=0.25)
-    exh = wami_exhaustive()
+    exh = wami_exhaustive(workers=8)
 
     lam = statistics.mean(c.lam_span for c in cos.characterizations.values())
     lam_nm = statistics.mean(c.lam_span for c in nm.characterizations.values())
     area = statistics.mean(c.area_span for c in cos.characterizations.values())
     area_nm = statistics.mean(c.area_span for c in nm.characterizations.values())
+    print(f"[table1] knob table: "
+          f"{', '.join(f'{n}={p}p/{u}u' for n, (p, u) in WAMI_KNOB_TABLE.items())}")
     print(f"[table1] spans with memory co-design: lambda {lam:.2f}x, "
           f"area {area:.2f}x   (paper: 4.06x / 2.58x)")
     print(f"[table1] spans dual-port only:        lambda {lam_nm:.2f}x, "
@@ -47,9 +60,12 @@ def main():
     red = exh.total_invocations / cos.total_invocations
     per = max(exh.invocations[n] / max(1, cos.invocations.get(n, 1))
               for n in exh.invocations)
+    by_phase = session.ledger.records_by_phase()
     print(f"[fig11] invocations: exhaustive {exh.total_invocations} vs "
           f"COSMOS {cos.total_invocations} = {red:.1f}x avg, "
           f"up to {per:.1f}x   (paper: 6.7x avg, up to 14.6x)")
+    print(f"[fig11] COSMOS breakdown by phase: "
+          + ", ".join(f"{k}={v}" for k, v in by_phase.items()))
 
     print(f"[fig10] Pareto curve ({len(cos.mapped)} points, "
           f"theta in [{cos.theta_min:.1f}, {cos.theta_max:.1f}] frames/s):")

@@ -5,9 +5,10 @@ from .components import (FRAME, N_LK, TILE, WamiComponent, build_components,
                          hessian, matrix_add, matrix_invert, matrix_mul,
                          matrix_reshape, matrix_sub, sd_update,
                          steepest_descent, warp_affine)
+from .knobs import WAMI_KNOB_TABLE, wami_knob_space
 from .pipeline import (MATRIX_INV_LATENCY_S, lucas_kanade, wami_app,
                        wami_cosmos, wami_exhaustive, wami_hls_tool,
-                       wami_knob_spaces, wami_tmg)
+                       wami_knob_spaces, wami_session, wami_tmg)
 
 __all__ = [
     "FRAME", "TILE", "N_LK", "WamiComponent", "build_components",
@@ -15,6 +16,6 @@ __all__ = [
     "sd_update", "matrix_add", "matrix_sub", "matrix_mul", "matrix_reshape",
     "matrix_invert", "warp_affine", "change_detection",
     "lucas_kanade", "wami_app", "wami_tmg", "wami_hls_tool",
-    "wami_knob_spaces", "wami_cosmos", "wami_exhaustive",
-    "MATRIX_INV_LATENCY_S",
+    "wami_knob_spaces", "wami_session", "wami_cosmos", "wami_exhaustive",
+    "WAMI_KNOB_TABLE", "wami_knob_space", "MATRIX_INV_LATENCY_S",
 ]

@@ -27,6 +27,7 @@ import numpy as np
 
 from ...core.hlsim import ComponentSpec, LoopNest
 from ...core.knobs import KnobSpace
+from .knobs import wami_knob_space
 from .cdfg import analyze_kernel
 
 __all__ = [
@@ -349,72 +350,71 @@ def build_components(tile: int = TILE, frame: int = FRAME,
     v = lambda *shape: jnp.zeros(shape, f32)
     s = jnp.zeros((), f32)
 
-    def ks(max_ports, max_unrolls):
-        return KnobSpace(clock_ns=1.0, max_ports=max_ports, max_unrolls=max_unrolls)
+    ks = wami_knob_space            # canonical Table-1 bounds
 
     comps = {
         "debayer": WamiComponent(
             name="debayer", apply=debayer,
             kernel=_k_debayer, kernel_args=(v(4, 4),),
             trip=t2 // 4, words_in=t2, words_out=3 * t2,
-            outer_repeats=tiles, knobs=ks(16, 32)),
+            outer_repeats=tiles, knobs=ks("debayer")),
         "grayscale": WamiComponent(
             name="grayscale", apply=grayscale,
             kernel=_k_grayscale, kernel_args=(v(3),),
             trip=t2, words_in=3 * t2, words_out=t2,
-            outer_repeats=tiles, knobs=ks(16, 32)),
+            outer_repeats=tiles, knobs=ks("grayscale")),
         "gradient": WamiComponent(
             name="gradient", apply=gradient,
             kernel=_k_gradient, kernel_args=(v(5),),
             trip=t2, words_in=t2, words_out=2 * t2,
-            outer_repeats=tiles, knobs=ks(16, 32)),
+            outer_repeats=tiles, knobs=ks("gradient")),
         "steep_descent": WamiComponent(
             name="steep_descent", apply=steepest_descent,
             kernel=_k_steep, kernel_args=(v(2), v(2)),
             trip=t2, words_in=2 * t2, words_out=6 * t2,
-            outer_repeats=tiles, knobs=ks(8, 16)),
+            outer_repeats=tiles, knobs=ks("steep_descent")),
         "hessian": WamiComponent(
             name="hessian", apply=hessian,
             kernel=_k_hessian, kernel_args=(v(6), v(21)),
             trip=t2, words_in=6 * t2, words_out=21,
-            outer_repeats=tiles, knobs=ks(16, 32),
+            outer_repeats=tiles, knobs=ks("hessian"),
             gamma_w_override=1),          # accumulator lives in registers
         "sd_update": WamiComponent(
             name="sd_update", apply=sd_update,
             kernel=_k_sd_update, kernel_args=(v(6), s, v(6)),
             trip=t2, words_in=7 * t2, words_out=6,
-            outer_repeats=tiles * n_lk, knobs=ks(16, 32),
+            outer_repeats=tiles * n_lk, knobs=ks("sd_update"),
             gamma_w_override=1),
         "matrix_sub": WamiComponent(
             name="matrix_sub", apply=matrix_sub,
             kernel=_k_mat_sub, kernel_args=(s, s),
             trip=t2, words_in=2 * t2, words_out=t2,
-            outer_repeats=tiles * n_lk, knobs=ks(8, 16)),
+            outer_repeats=tiles * n_lk, knobs=ks("matrix_sub")),
         "matrix_add": WamiComponent(
             name="matrix_add", apply=matrix_add,
             kernel=_k_mat_add, kernel_args=(s, s),
             trip=36, words_in=72, words_out=36,
-            outer_repeats=n_lk, knobs=ks(4, 8)),
+            outer_repeats=n_lk, knobs=ks("matrix_add")),
         "matrix_mul": WamiComponent(
             name="matrix_mul", apply=matrix_mul,
             kernel=_k_mat_mul, kernel_args=(v(6), v(6)),
             trip=36, words_in=72, words_out=36,
-            outer_repeats=n_lk, knobs=ks(4, 12)),
+            outer_repeats=n_lk, knobs=ks("matrix_mul")),
         "matrix_resh": WamiComponent(
             name="matrix_resh", apply=lambda a: matrix_reshape(a, (-1,)),
             kernel=_k_mat_resh, kernel_args=(s,),
             trip=36, words_in=36, words_out=36,
-            outer_repeats=n_lk, knobs=ks(2, 8)),
+            outer_repeats=n_lk, knobs=ks("matrix_resh")),
         "warp": WamiComponent(
             name="warp", apply=warp_affine,
             kernel=_k_warp, kernel_args=(v(4), v(2)),
             trip=t2, words_in=t2, words_out=t2,
-            outer_repeats=tiles * n_lk, knobs=ks(8, 16)),
+            outer_repeats=tiles * n_lk, knobs=ks("warp")),
         "change_det": WamiComponent(
             name="change_det", apply=change_detection,
             kernel=_k_change_det, kernel_args=(s, v(9)),
             trip=t2, words_in=10 * t2, words_out=10 * t2,
-            outer_repeats=tiles, knobs=ks(8, 16),
+            outer_repeats=tiles, knobs=ks("change_det"),
             gamma_r_override=1),          # GMM state cached in registers
     }
     return comps

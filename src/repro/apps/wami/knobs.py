@@ -1,0 +1,39 @@
+"""The canonical WAMI knob-space table (Section 7.2).
+
+One source of truth for the per-component exploration bounds —
+``(max_ports, max_unrolls)`` per Table 1 component, following the paper:
+'a number of ports in the interval [1, 16] and a maximum number of
+unrolls in the interval [8, 32], depending on the components'.
+``components.build_components``, the benchmarks, and the examples all
+import from here instead of repeating the table inline.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from ...core.knobs import KnobSpace
+
+__all__ = ["WAMI_KNOB_TABLE", "wami_knob_space"]
+
+# component -> (max_ports, max_unrolls)
+WAMI_KNOB_TABLE: Dict[str, Tuple[int, int]] = {
+    "debayer":       (16, 32),
+    "grayscale":     (16, 32),
+    "gradient":      (16, 32),
+    "steep_descent": (8, 16),
+    "hessian":       (16, 32),
+    "sd_update":     (16, 32),
+    "matrix_sub":    (8, 16),
+    "matrix_add":    (4, 8),
+    "matrix_mul":    (4, 12),
+    "matrix_resh":   (2, 8),
+    "warp":          (8, 16),
+    "change_det":    (8, 16),
+}
+
+
+def wami_knob_space(component: str, *, clock_ns: float = 1.0) -> KnobSpace:
+    max_ports, max_unrolls = WAMI_KNOB_TABLE[component]
+    return KnobSpace(clock_ns=clock_ns, max_ports=max_ports,
+                     max_unrolls=max_unrolls)

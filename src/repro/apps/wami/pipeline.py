@@ -22,13 +22,15 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ...core import (CosmosResult, CountingTool, ExhaustiveResult, HLSTool,
-                     KnobSpace, Place, TMG, Transition, cosmos_dse,
-                     exhaustive_dse)
+from ...core import (CosmosResult, ExhaustiveResult, ExplorationSession,
+                     HLSTool, KnobSpace, OracleLedger, Place, TMG, Transition,
+                     cosmos_dse, exhaustive_dse)
 from . import components as C
+from .knobs import WAMI_KNOB_TABLE, wami_knob_space
 
 __all__ = ["lucas_kanade", "wami_app", "wami_tmg", "wami_hls_tool",
-           "wami_knob_spaces", "wami_cosmos", "wami_exhaustive",
+           "wami_knob_spaces", "wami_session", "wami_cosmos",
+           "wami_exhaustive", "WAMI_KNOB_TABLE",
            "MATRIX_INV_LATENCY_S"]
 
 # Matrix-Inv runs in software (Section 7.1): fixed effective latency.
@@ -152,22 +154,36 @@ def wami_knob_spaces(tile: int = C.TILE, frame: int = C.FRAME
     return {n: c.knobs for n, c in comps.items()}
 
 
+def wami_session(delta: float = 0.25, noise: float = 1.0, *,
+                 workers: int = 1, **kwargs) -> ExplorationSession:
+    """An :class:`ExplorationSession` over the WAMI system — the object
+    API behind :func:`wami_cosmos` (phase control, progress events,
+    persistent caching, mid-run serialize/restore)."""
+    return ExplorationSession(wami_tmg(), wami_hls_tool(noise=noise),
+                              wami_knob_spaces(), delta=delta,
+                              fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
+                              workers=workers, **kwargs)
+
+
 def wami_cosmos(delta: float = 0.25, noise: float = 1.0,
-                counting: Optional[CountingTool] = None) -> CosmosResult:
+                counting: Optional[OracleLedger] = None, *,
+                workers: int = 1) -> CosmosResult:
     """Run the full COSMOS methodology on WAMI (the paper's experiment)."""
     tool = wami_hls_tool(noise=noise)
     return cosmos_dse(wami_tmg(), tool, wami_knob_spaces(), delta=delta,
                       fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
-                      counting=counting)
+                      counting=counting, workers=workers)
 
 
 def wami_exhaustive(noise: float = 1.0,
-                    counting: Optional[CountingTool] = None) -> ExhaustiveResult:
+                    counting: Optional[OracleLedger] = None, *,
+                    workers: int = 1) -> ExhaustiveResult:
     """The exhaustive baseline: synthesize every knob combination."""
     tool = wami_hls_tool(noise=noise)
     spaces = wami_knob_spaces()
     comps = [n for n in spaces]     # matrix_inv excluded (software)
-    return exhaustive_dse(comps, tool, spaces, counting=counting)
+    return exhaustive_dse(comps, tool, spaces, counting=counting,
+                          workers=workers)
 
 
 def wami_cosmos_no_memory(delta: float = 0.25, noise: float = 1.0

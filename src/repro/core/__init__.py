@@ -1,31 +1,41 @@
 """COSMOS core: compositional DSE coordinating synthesis + memory tools.
 
 This package is the paper's primary contribution, implemented generically
-over a ``SynthesisTool`` oracle:
+over a batched synthesis oracle:
 
   * :mod:`repro.core.tmg` — timed-marked-graph system model (Section 2.2)
+  * :mod:`repro.core.oracle` — the unified oracle protocol: batched
+    ``evaluate``/``evaluate_batch``, the ``OracleLedger`` invocation
+    accounting (Fig. 11), and the persistent result cache
+  * :mod:`repro.core.session` — ``ExplorationSession``: the batched,
+    resumable drive with explicit characterize/plan/map phases
   * :mod:`repro.core.characterize` — Algorithm 1 (Section 5)
   * :mod:`repro.core.planning` — Eq. (2) LP synthesis planning (Section 6.1)
   * :mod:`repro.core.mapping` — Eq. (4/5) synthesis mapping (Section 6.2)
-  * :mod:`repro.core.dse` — full driver + exhaustive baseline (Section 7)
+  * :mod:`repro.core.dse` — thin drivers + exhaustive baseline (Section 7)
   * :mod:`repro.core.hlsim` / :mod:`repro.core.memgen` — the simulated
     HLS + Mnemosyne oracles (DESIGN.md Section 2)
-  * :mod:`repro.core.autotune` — the TPU instantiation: XLA compiles as
-    the synthesis oracle, sharding/remat as the memory knobs
+  * :mod:`repro.core.autotune` / :mod:`repro.core.xlatool` — the TPU
+    instantiation: XLA pricing/compiles as the synthesis oracle,
+    sharding/remat as the memory knobs
 """
 
 from .characterize import CharacterizationResult, characterize_component, spans
 from .dse import (CosmosResult, ExhaustiveResult, SystemPoint,
                   compose_exhaustive, cosmos_dse, exhaustive_dse)
 from .hlsim import ComponentSpec, HLSTool, LoopNest
-from .knobs import (CDFGFacts, CountingTool, KnobSpace, Region, Synthesis,
-                    SynthesisTool, powers_of_two)
+from .knobs import (CDFGFacts, KnobSpace, Region, Synthesis, SynthesisTool,
+                    powers_of_two)
 from .mapping import MapOutcome, map_target, phi
 from .memgen import MemGen, PLM, PLMSpec
+from .oracle import (CountingTool, InvocationRecord, InvocationRequest,
+                     Oracle, OracleBatchMixin, OracleLedger,
+                     PersistentOracleCache)
 from .pareto import (DesignPoint, check_delta_curve, pareto_front_max_min,
                      pareto_front_min_min, span)
 from .planning import (ComponentModel, PiecewiseLinearCost, PlanPoint, plan,
                        sweep, theta_bounds)
+from .session import ExplorationSession, ProgressEvent
 from .tmg import TMG, Place, Transition, feedback_pipeline_tmg, pipeline_tmg
 
 __all__ = [
@@ -33,7 +43,10 @@ __all__ = [
     "DesignPoint", "pareto_front_min_min", "pareto_front_max_min", "span",
     "check_delta_curve",
     "KnobSpace", "Region", "Synthesis", "CDFGFacts", "SynthesisTool",
-    "CountingTool", "powers_of_two",
+    "powers_of_two",
+    "Oracle", "OracleBatchMixin", "OracleLedger", "CountingTool",
+    "InvocationRequest", "InvocationRecord", "PersistentOracleCache",
+    "ExplorationSession", "ProgressEvent",
     "ComponentSpec", "LoopNest", "HLSTool", "MemGen", "PLM", "PLMSpec",
     "CharacterizationResult", "characterize_component", "spans",
     "ComponentModel", "PiecewiseLinearCost", "PlanPoint", "plan", "sweep",

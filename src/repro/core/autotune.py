@@ -13,9 +13,13 @@ so the LP/mapping layer can plan without compiling); the knobs are
 ``choose_train_knobs`` is Algorithm-1-shaped: walk the knob ladder from
 cheapest-latency to cheapest-memory, keep the first point whose PRICED
 footprint fits the HBM budget, then confirm with a single compile (the
-invocation-frugality argument of the paper, applied to XLA).  The priced
-model is also what ``repro.ft.elastic`` re-plans against on a mesh
-change — characterization is reused, only the mapped compile re-runs.
+invocation-frugality argument of the paper, applied to XLA).  Since the
+oracle unification it is expressed as an :class:`XLAOracle` walk behind
+the same ``Oracle``/``OracleLedger`` protocol as the HLS backend, so the
+TPU path shares the planning/mapping machinery and its invocation
+accounting.  The priced model is also what ``repro.ft.elastic`` re-plans
+against on a mesh change — characterization is reused, only the mapped
+compile re-runs.
 """
 
 from __future__ import annotations
@@ -27,7 +31,7 @@ from typing import Dict, Optional, Tuple
 from ..configs.base import ModelConfig, ShapeSpec
 
 __all__ = ["MemoryPlan", "price_train_step", "choose_train_knobs",
-           "HBM_BYTES_PER_CHIP"]
+           "XLAOracle", "HBM_BYTES_PER_CHIP"]
 
 HBM_BYTES_PER_CHIP = 16 * 1024 ** 3          # TPU v5e
 
@@ -131,30 +135,151 @@ _LADDER = [
     dict(microbatches=64, remat="full"),
 ]
 
+# relative recompute cost of each remat policy (step-time proxy weights)
+_REMAT_FACTOR = {"none": 1.0, "dots": 1.15, "full": 4.0 / 3.0}
+
+
+class XLAOracle:
+    """The TPU memory-planner as a COSMOS oracle over knob-ladder rungs.
+
+    A *component* is one train stage ``(cfg, shape, mesh_shape)``; the
+    ``unrolls`` knob indexes the Algorithm-1 ladder (rung 1 = fastest,
+    rung ``len(_LADDER)`` = most memory-frugal) and ``ports`` is unused
+    (single region).  One evaluation runs the priced memory plan — the
+    Mnemosyne analogue: alpha = per-chip HBM bytes, lambda = a monotone
+    relative step-time proxy (recompute factor x microbatch weight-re-read
+    overhead) that preserves the ladder's fastest-to-slowest order.  The
+    one *real* compile happens only for the mapped rung, via
+    ``repro.launch.dryrun`` — the paper's invocation-frugality discipline
+    applied to XLA.
+    """
+
+    def __init__(self, stages: Optional[Dict[str, Tuple[ModelConfig,
+                                                        ShapeSpec,
+                                                        Dict[str, int]]]] = None):
+        self.stages = dict(stages or {})
+
+    def register(self, name: str, cfg: ModelConfig, shape: ShapeSpec,
+                 mesh_shape: Dict[str, int]) -> str:
+        prev = self.stages.get(name)
+        if prev is not None and prev != (cfg, shape, mesh_shape):
+            raise ValueError(f"stage {name!r} already registered with a "
+                             f"different (cfg, shape, mesh)")
+        self.stages[name] = (cfg, shape, mesh_shape)
+        return name
+
+    # -- SynthesisTool / Oracle protocol --------------------------------
+    def synthesize(self, component: str, *, unrolls: int, ports: int,
+                   max_states=None):
+        from .knobs import Synthesis
+        cfg, shape, mesh_shape = self.stages[component]
+        dp, _ = _mesh_sizes(mesh_shape)
+        accum = "bfloat16" if cfg.param_count() > 30e9 else "float32"
+        if not 1 <= unrolls <= len(_LADDER):
+            return Synthesis(lam=float("inf"), area=float("inf"),
+                             ports=ports, unrolls=unrolls, feasible=False)
+        rung = _LADDER[unrolls - 1]
+        mb = rung["microbatches"]
+        if shape.global_batch // dp < mb:      # cannot split further
+            return Synthesis(lam=float("inf"), area=float("inf"),
+                             ports=ports, unrolls=unrolls, feasible=False)
+        plan = price_train_step(cfg, shape, mesh_shape, microbatches=mb,
+                                remat=rung["remat"], accum_dtype=accum)
+        lam = _REMAT_FACTOR[rung["remat"]] + 0.02 * (mb - 1)
+        detail = {"est_bytes": float(plan.est_bytes),
+                  "microbatches": float(mb),
+                  "fits": float(plan.est_bytes <= HBM_BYTES_PER_CHIP)}
+        detail.update({f"bd_{k}": v for k, v in plan.breakdown.items()})
+        return Synthesis(lam=lam, area=float(plan.est_bytes), ports=ports,
+                         unrolls=unrolls, states_per_iter=mb, feasible=True,
+                         detail=detail)
+
+    def evaluate(self, request):
+        return self.synthesize(request.component, unrolls=request.unrolls,
+                               ports=request.ports,
+                               max_states=request.max_states)
+
+    def evaluate_batch(self, requests, *, workers: Optional[int] = None):
+        return [self.evaluate(r) for r in requests]   # pricing is cheap
+
+    def cdfg_facts(self, component: str, synth):
+        from .knobs import CDFGFacts
+        _, shape, _ = self.stages[component]
+        return CDFGFacts(gamma_r=1, gamma_w=1,
+                         eta=max(1, synth.states_per_iter),
+                         trip=shape.global_batch, has_plm_access=False)
+
+    def plan_from_synthesis(self, component: str, synth) -> MemoryPlan:
+        """Reconstruct the exact MemoryPlan a feasible synthesis priced."""
+        cfg, _, _ = self.stages[component]
+        rung = _LADDER[synth.unrolls - 1]
+        accum = "bfloat16" if cfg.param_count() > 30e9 else "float32"
+        breakdown = {k[len("bd_"):]: v for k, v in synth.detail.items()
+                     if k.startswith("bd_")}
+        return MemoryPlan(microbatches=rung["microbatches"],
+                          remat=rung["remat"], accum_dtype=accum,
+                          est_bytes=int(synth.detail["est_bytes"]),
+                          breakdown=breakdown)
+
 
 def choose_train_knobs(cfg: ModelConfig, shape: ShapeSpec,
                        mesh_shape: Dict[str, int], *,
                        budget: int = HBM_BYTES_PER_CHIP,
-                       slack: float = 0.90) -> MemoryPlan:
+                       slack: float = 0.90,
+                       ledger=None, stage: Optional[str] = None) -> MemoryPlan:
     """Pick the fastest knob setting whose priced footprint fits.
+
+    Re-expressed as an :class:`XLAOracle` walk: every reachable ladder
+    rung is priced in one ``evaluate_batch`` (rungs are independent) and
+    the fastest fitting rung wins — the characterization half of the
+    paper's methodology, with the single confirming compile (the mapped
+    invocation) left to ``repro.launch.dryrun``.  Pass a shared
+    ``ledger`` (an :class:`~repro.core.oracle.OracleLedger` wrapping an
+    ``XLAOracle``) to account invocations across stages/re-plans — a
+    repeated plan for the same stage is a cache hit, not a new pricing.
 
     Models >30B accumulate gradients in bf16 (halves the standing grad
     buffer; the EF-compression module covers the numerics argument).
-    Falls back to the most frugal rung if nothing fits (the caller
-    reports the deficit honestly).
+    Falls back to the most frugal reachable rung if nothing fits (the
+    caller reports the deficit honestly).
     """
+    from .oracle import InvocationRequest, OracleLedger
+    if ledger is None:
+        ledger = OracleLedger(XLAOracle())
+    oracle = ledger.tool
+    if not isinstance(oracle, XLAOracle):
+        raise TypeError("choose_train_knobs needs a ledger over an XLAOracle")
+    name = oracle.register(
+        stage or f"{cfg.name}/{shape.name}/{_mesh_key(mesh_shape)}",
+        cfg, shape, mesh_shape)
+
     accum = "bfloat16" if cfg.param_count() > 30e9 else "float32"
     dp, _ = _mesh_sizes(mesh_shape)
-    best = None
-    for rung in _LADDER:
+    # the seed walked the ladder until the first unsplittable rung; the
+    # reachable prefix is known a-priori, so it prices as one batch
+    rungs = []
+    for i, rung in enumerate(_LADDER):
         if shape.global_batch // dp < rung["microbatches"]:
-            break                      # cannot split further
-        plan = price_train_step(cfg, shape, mesh_shape,
-                                microbatches=rung["microbatches"],
-                                remat=rung["remat"], accum_dtype=accum)
-        best = plan
-        if plan.est_bytes <= budget * slack:
-            return plan
-    return best if best is not None else price_train_step(
-        cfg, shape, mesh_shape, microbatches=1, remat="full",
-        accum_dtype=accum)
+            break
+        rungs.append(i + 1)
+    if not rungs:
+        return price_train_step(cfg, shape, mesh_shape, microbatches=1,
+                                remat="full", accum_dtype=accum)
+    outs = ledger.evaluate_batch(
+        [InvocationRequest(component=name, unrolls=u, ports=1)
+         for u in rungs])
+    best = None
+    for s in outs:
+        if not s.feasible:
+            continue
+        best = s
+        if s.detail["est_bytes"] <= budget * slack:
+            break
+    if best is None:
+        return price_train_step(cfg, shape, mesh_shape, microbatches=1,
+                                remat="full", accum_dtype=accum)
+    return oracle.plan_from_synthesis(name, best)
+
+
+def _mesh_key(mesh_shape: Dict[str, int]) -> str:
+    return "x".join(f"{k}{v}" for k, v in sorted(mesh_shape.items()))

@@ -23,7 +23,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .knobs import CDFGFacts, CountingTool, KnobSpace, Region, Synthesis
+from .knobs import CDFGFacts, KnobSpace, Region, Synthesis
+from .oracle import OracleLedger
 from .pareto import DesignPoint, pareto_front_min_min, span
 
 __all__ = ["CharacterizationResult", "characterize_component", "spans"]
@@ -52,7 +53,7 @@ def _point(component: str, s: Synthesis) -> DesignPoint:
                        meta=(("states", float(s.states_per_iter)),))
 
 
-def characterize_component(tool: CountingTool, component: str,
+def characterize_component(tool: OracleLedger, component: str,
                            space: KnobSpace, *,
                            neighbourhood: int = 2,
                            prune_dominated_regions: bool = True

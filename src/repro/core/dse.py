@@ -1,123 +1,56 @@
-"""The full COSMOS driver (Fig. 1) and the exhaustive-search baseline.
+"""The COSMOS driver (Fig. 1) and the exhaustive-search baseline.
 
-COSMOS = component characterization (Algorithm 1) + synthesis planning
-(Eq. 2 LP over the TMG) + synthesis mapping (phi).  The exhaustive
+``cosmos_dse`` — component characterization (Algorithm 1) + synthesis
+planning (Eq. 2 LP over the TMG) + synthesis mapping (phi) — is now a
+thin wrapper over :class:`repro.core.session.ExplorationSession`, which
+batches every independent oracle invocation per phase; ``workers=1``
+reproduces the seed's sequential drive call-for-call.  The exhaustive
 baseline synthesizes every (ports x unrolls) combination per component —
-the paper's Fig. 11 reference — and, for small systems, composes the
-per-component Pareto fronts to the exact system front (Fig. 5), which is
-what COSMOS's mapped curve is validated against in the tests.
+the paper's Fig. 11 reference — in one batch (all points are
+independent), and, for small systems, composes the per-component Pareto
+fronts to the exact system front (Fig. 5), which is what COSMOS's mapped
+curve is validated against in the tests.
 """
 
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from .characterize import CharacterizationResult, characterize_component
-from .knobs import CountingTool, KnobSpace, SynthesisTool
-from .mapping import MapOutcome, map_target
+from .knobs import KnobSpace
+from .oracle import InvocationRequest, OracleCache, OracleLedger
 from .pareto import DesignPoint, pareto_front_max_min, pareto_front_min_min
-from .planning import ComponentModel, PlanPoint, sweep, theta_bounds
+from .session import (CosmosResult, ExplorationSession, ProgressEvent,
+                      SystemPoint)
 from .tmg import TMG
 
 __all__ = ["SystemPoint", "CosmosResult", "cosmos_dse",
            "ExhaustiveResult", "exhaustive_dse", "compose_exhaustive"]
 
 
-@dataclass(frozen=True)
-class SystemPoint:
-    """A mapped system implementation (one point of Fig. 10)."""
-
-    theta_planned: float
-    cost_planned: float
-    theta_actual: float
-    cost_actual: float
-    outcomes: Tuple[MapOutcome, ...]
-
-    @property
-    def sigma_mismatch(self) -> float:
-        """sigma(d_p, d_m) = |d_m - d_p| / d_p  (Section 7.3)."""
-        if self.cost_planned <= 0:
-            return float("inf")
-        return abs(self.cost_actual - self.cost_planned) / self.cost_planned
-
-    def as_design_point(self) -> DesignPoint:
-        return DesignPoint(perf=self.theta_actual, cost=self.cost_actual)
-
-
-@dataclass
-class CosmosResult:
-    characterizations: Dict[str, CharacterizationResult]
-    planned: List[PlanPoint]
-    mapped: List[SystemPoint]
-    invocations: Dict[str, int]         # total per component (char + map)
-    theta_min: float
-    theta_max: float
-
-    @property
-    def total_invocations(self) -> int:
-        return sum(self.invocations.values())
-
-    def pareto(self) -> List[DesignPoint]:
-        return pareto_front_max_min([m.as_design_point() for m in self.mapped])
-
-
-def cosmos_dse(tmg: TMG, tool: SynthesisTool, spaces: Dict[str, KnobSpace],
+def cosmos_dse(tmg: TMG, tool, spaces: Dict[str, KnobSpace],
                *, delta: float = 0.25,
                fixed: Optional[Dict[str, float]] = None,
-               counting: Optional[CountingTool] = None) -> CosmosResult:
+               counting: Optional[OracleLedger] = None,
+               workers: int = 1,
+               cache: Optional[OracleCache] = None,
+               on_event: Optional[Callable[[ProgressEvent], None]] = None
+               ) -> CosmosResult:
     """Run the complete COSMOS methodology on a system TMG.
 
     ``spaces`` maps component name -> knob bounds; ``fixed`` maps
     components executed in software (Matrix-Inv in Fig. 8) to their fixed
-    effective latency — they are excluded from synthesis.
+    effective latency — they are excluded from synthesis.  ``counting``
+    accepts a pre-built :class:`OracleLedger` (the legacy ``CountingTool``
+    is one) when the caller wants to share accounting across runs;
+    ``workers`` > 1 batches each phase's independent invocations without
+    changing any result or count.
     """
-    fixed = fixed or {}
-    ctool = counting or CountingTool(tool)
-
-    # ---- step 1: component characterization (Algorithm 1) -------------
-    chars: Dict[str, CharacterizationResult] = {}
-    models: Dict[str, ComponentModel] = {}
-    for t in tmg.transitions:
-        name = t.name
-        if name in fixed:
-            models[name] = ComponentModel.fixed_latency(name, fixed[name])
-            continue
-        res = characterize_component(ctool, name, spaces[name])
-        chars[name] = res
-        models[name] = ComponentModel.from_regions(name, res.regions)
-
-    # ---- step 2a: synthesis planning (Eq. 2 sweep) ---------------------
-    th_lo, th_hi = theta_bounds(tmg, models)
-    planned = sweep(tmg, models, delta)
-
-    # ---- step 2b: synthesis mapping (phi) ------------------------------
-    mapped: List[SystemPoint] = []
-    for plan_pt in planned:
-        outcomes: List[MapOutcome] = []
-        lam_actual: Dict[str, float] = {}
-        cost_actual = 0.0
-        for t in tmg.transitions:
-            name = t.name
-            if name in fixed:
-                lam_actual[name] = fixed[name]
-                continue
-            out = map_target(ctool, name, chars[name].regions,
-                             plan_pt.lam_targets[name])
-            outcomes.append(out)
-            lam_actual[name] = out.synthesis.lam
-            cost_actual += out.synthesis.area
-        theta_actual = tmg.throughput(lam_actual)
-        mapped.append(SystemPoint(theta_planned=plan_pt.theta,
-                                  cost_planned=plan_pt.cost,
-                                  theta_actual=theta_actual,
-                                  cost_actual=cost_actual,
-                                  outcomes=tuple(outcomes)))
-
-    return CosmosResult(characterizations=chars, planned=planned,
-                        mapped=mapped, invocations=dict(ctool.invocations),
-                        theta_min=th_lo, theta_max=th_hi)
+    session = ExplorationSession(tmg, tool, spaces, delta=delta, fixed=fixed,
+                                 ledger=counting, cache=cache,
+                                 workers=workers, on_event=on_event)
+    return session.run()
 
 
 # ----------------------------------------------------------------------
@@ -142,26 +75,46 @@ class ExhaustiveResult:
         return out
 
 
-def exhaustive_dse(components: Sequence[str], tool: SynthesisTool,
+def exhaustive_dse(components: Sequence[str], tool,
                    spaces: Dict[str, KnobSpace],
-                   counting: Optional[CountingTool] = None) -> ExhaustiveResult:
-    """Step (i) of the exhaustive method: synthesize ALL knob combinations."""
-    ctool = counting or CountingTool(tool)
-    points: Dict[str, List[DesignPoint]] = {}
+                   counting: Optional[OracleLedger] = None,
+                   *, workers: int = 1) -> ExhaustiveResult:
+    """Step (i) of the exhaustive method: synthesize ALL knob combinations.
+
+    Every point is independent, so the whole sweep is a single
+    ``evaluate_batch`` over the ledger; results (and counts — every
+    unique point is invoked exactly once, feasible or not) are identical
+    to the sequential drive regardless of ``workers``.
+    """
+    ctool = counting or OracleLedger(tool, workers=workers)
+    requests: List[InvocationRequest] = []
+    spans: List[Tuple[str, int, int]] = []      # (component, start, stop)
     for name in components:
         space = spaces[name]
-        pts: List[DesignPoint] = []
+        start = len(requests)
         for ports in space.ports():
             for unrolls in range(max(1, ports), space.max_unrolls + 1):
-                s = ctool.synthesize(name, unrolls=unrolls, ports=ports)
-                if s.feasible:
-                    pts.append(DesignPoint(
-                        perf=s.lam, cost=s.area,
-                        knobs=(("ports", ports), ("unrolls", unrolls))))
+                requests.append(InvocationRequest(
+                    component=name, unrolls=unrolls, ports=ports))
+        spans.append((name, start, len(requests)))
+
+    results = ctool.evaluate_batch(requests, workers=workers)
+
+    points: Dict[str, List[DesignPoint]] = {}
+    for name, start, stop in spans:
+        pts: List[DesignPoint] = []
+        for req, s in zip(requests[start:stop], results[start:stop]):
+            if s.feasible:
+                pts.append(DesignPoint(
+                    perf=s.lam, cost=s.area,
+                    knobs=(("ports", req.ports), ("unrolls", req.unrolls))))
         points[name] = pts
     fronts = {n: pareto_front_min_min(p) for n, p in points.items()}
-    return ExhaustiveResult(points=points, fronts=fronts,
-                            invocations=dict(ctool.invocations))
+    inv = {n: ctool.invocations[n] for n, _, _ in spans
+           if n in ctool.invocations}
+    for name, n in ctool.invocations.items():
+        inv.setdefault(name, n)
+    return ExhaustiveResult(points=points, fronts=fronts, invocations=inv)
 
 
 def compose_exhaustive(tmg: TMG, fronts: Dict[str, List[DesignPoint]],

@@ -30,6 +30,7 @@ from typing import Dict, Optional
 
 from .knobs import CDFGFacts, Synthesis
 from .memgen import MemGen, PLMSpec
+from .oracle import OracleBatchMixin
 
 __all__ = ["LoopNest", "ComponentSpec", "HLSTool"]
 
@@ -85,9 +86,12 @@ _FU_SHARING_EXP = 0.90         # resource sharing: area ~ (ops*u)^0.90
 _DMA_WORDS_PER_CYCLE = 8       # 256-bit TLM channel / 32-bit words
 
 
-class HLSTool:
+class HLSTool(OracleBatchMixin):
     """SynthesisTool backend with the paper's HLS economics.
 
+    Adapts directly to the batched ``Oracle`` protocol via
+    :class:`~repro.core.oracle.OracleBatchMixin` (every synthesis is
+    pure, so independent knob points fan out over a thread pool).
     ``noise`` scales the heuristic perturbation (0 disables it — useful in
     unit tests of the mapping function's exactness).
     """

@@ -7,9 +7,10 @@ lower-right (lambda_max, alpha_min) corner (Algorithm 1).
 
 ``SynthesisTool`` is the expensive oracle being coordinated: the simulated
 HLS scheduler (core.hlsim) for the WAMI reproduction, and the real XLA
-compiler (core.autotune.XLATool) for the TPU instantiation.  Invocation
-accounting — the paper's efficiency metric (Fig. 11) — lives here so both
-backends are measured identically.
+compiler (core.xlatool / core.autotune) for the TPU instantiation.
+Invocation accounting — the paper's efficiency metric (Fig. 11) — lives
+in :mod:`repro.core.oracle` (``OracleLedger``) so both backends are
+measured identically; the legacy ``CountingTool`` name resolves there.
 """
 
 from __future__ import annotations
@@ -142,38 +143,11 @@ class SynthesisTool(Protocol):
     def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts: ...
 
 
-class CountingTool:
-    """Wraps a SynthesisTool with the paper's invocation accounting.
-
-    Repeated invocations with identical knobs are served from cache and
-    NOT counted (Section 7.3: 'COSMOS avoids performing an invocation of
-    the HLS with the same knobs more than once').  Failed syntheses (the
-    lambda-constraint discards) ARE counted — Fig. 11 includes them.
-    """
-
-    def __init__(self, tool: SynthesisTool):
-        self._tool = tool
-        self.invocations: Dict[str, int] = {}
-        self.failed: Dict[str, int] = {}
-        self._cache: Dict[Tuple, Synthesis] = {}
-
-    def synthesize(self, component: str, *, unrolls: int, ports: int,
-                   max_states: Optional[int] = None) -> Synthesis:
-        key = (component, unrolls, ports, max_states)
-        if key in self._cache:
-            return self._cache[key]
-        self.invocations[component] = self.invocations.get(component, 0) + 1
-        out = self._tool.synthesize(component, unrolls=unrolls, ports=ports,
-                                    max_states=max_states)
-        if not out.feasible:
-            self.failed[component] = self.failed.get(component, 0) + 1
-        self._cache[key] = out
-        return out
-
-    def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts:
-        return self._tool.cdfg_facts(component, synth)
-
-    def total(self, component: Optional[str] = None) -> int:
-        if component is not None:
-            return self.invocations.get(component, 0)
-        return sum(self.invocations.values())
+def __getattr__(name: str):
+    # CountingTool grew into repro.core.oracle.OracleLedger; the lazy
+    # import keeps `from repro.core.knobs import CountingTool` working
+    # without a knobs -> oracle -> knobs import cycle.
+    if name == "CountingTool":
+        from .oracle import CountingTool
+        return CountingTool
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -25,7 +25,8 @@ import math
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
-from .knobs import CountingTool, Region, Synthesis
+from .knobs import Region, Synthesis
+from .oracle import OracleLedger
 
 __all__ = ["phi", "MapOutcome", "map_target"]
 
@@ -55,7 +56,7 @@ def _sorted_regions(regions: Sequence[Region]) -> List[Region]:
     return sorted(regions, key=lambda r: r.lam_max, reverse=True)
 
 
-def map_target(tool: CountingTool, component: str,
+def map_target(tool: OracleLedger, component: str,
                regions: Sequence[Region], lam_target: float,
                *, max_unroll_bumps: int = 4) -> MapOutcome:
     """Map one component's lam_target to a synthesized implementation."""

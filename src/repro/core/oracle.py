@@ -1,0 +1,400 @@
+"""The unified synthesis-oracle layer: one query interface for every backend.
+
+COSMOS's headline result is *invocation frugality* — the system-level
+Pareto front is recovered with up to 14.6x fewer tool calls than the
+exhaustive baseline (Fig. 11) — so the seam between the DSE engine and
+the expensive tool is the load-bearing interface of the repository.  This
+module defines it once, for every oracle:
+
+  * :class:`InvocationRequest` — one knob point to price/synthesize;
+  * :class:`Oracle` — the protocol: ``evaluate`` one request or
+    ``evaluate_batch`` many (independent knob points fan out over a
+    thread pool, since every hlsim/XLA invocation is pure);
+  * :class:`OracleLedger` — the accounting + caching layer that subsumes
+    the old ``CountingTool``: repeats are cached and NOT counted
+    (Section 7.3), infeasible points ARE counted (Fig. 11 includes the
+    lambda-constraint discards), identical invocations issued
+    concurrently are de-duplicated in flight, and every real tool call
+    leaves a structured :class:`InvocationRecord`;
+  * :class:`PersistentOracleCache` — a pluggable cache backed by
+    :mod:`repro.checkpoint.store`, so a killed DSE run resumes without
+    re-invoking the tool for any point it already paid for.
+
+``CountingTool`` remains as a thin legacy alias so the seed's published
+surface keeps working.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+from .knobs import CDFGFacts, Synthesis
+
+__all__ = [
+    "InvocationRequest",
+    "InvocationRecord",
+    "Oracle",
+    "OracleBatchMixin",
+    "OracleCache",
+    "PersistentOracleCache",
+    "OracleLedger",
+    "CountingTool",
+]
+
+# key type used everywhere below: (component, unrolls, ports, max_states)
+Key = Tuple[str, int, int, Optional[int]]
+
+
+@dataclass(frozen=True)
+class InvocationRequest:
+    """One knob point submitted to an oracle.
+
+    ``max_states`` carries the lambda-constraint of Algorithm 1 (the
+    synthesis fails when the scheduler cannot fit an iteration within
+    that many states); ``None`` means unconstrained.
+    """
+
+    component: str
+    unrolls: int
+    ports: int
+    max_states: Optional[int] = None
+
+    @property
+    def key(self) -> Key:
+        return (self.component, self.unrolls, self.ports, self.max_states)
+
+
+@dataclass(frozen=True)
+class InvocationRecord:
+    """One *real* tool call, as accounted in Fig. 11.
+
+    Cache hits never produce a record — a record is money spent.
+    ``phase`` tags which DSE phase paid for it (characterize/map/...),
+    which is what the invocation-breakdown benchmarks aggregate.
+    """
+
+    component: str
+    unrolls: int
+    ports: int
+    max_states: Optional[int]
+    feasible: bool
+    lam: float
+    area: float
+    phase: str = ""
+    wall_s: float = 0.0
+
+
+@runtime_checkable
+class Oracle(Protocol):
+    """The expensive oracle COSMOS coordinates, batched form.
+
+    ``evaluate`` prices/synthesizes a single knob point.
+    ``evaluate_batch`` prices many *independent* points; implementations
+    are free to fan out (thread pool, async compile service, RPC) as long
+    as results come back in request order.  ``cdfg_facts`` exposes the
+    Eq. (1) inputs extracted from a completed synthesis.
+    """
+
+    def evaluate(self, request: InvocationRequest) -> Synthesis: ...
+
+    def evaluate_batch(self, requests: Sequence[InvocationRequest]
+                       ) -> List[Synthesis]: ...
+
+    def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts: ...
+
+
+class OracleBatchMixin:
+    """Adapts a ``synthesize``-style SynthesisTool to the Oracle protocol.
+
+    Backends inherit this and only implement ``synthesize`` (+
+    ``cdfg_facts``); the default batch is a thread-pool fan-out, valid
+    because every backend invocation in this repo is pure.
+    """
+
+    batch_workers: int = 8
+
+    def evaluate(self, request: InvocationRequest) -> Synthesis:
+        return self.synthesize(request.component, unrolls=request.unrolls,
+                               ports=request.ports,
+                               max_states=request.max_states)
+
+    def evaluate_batch(self, requests: Sequence[InvocationRequest],
+                       *, workers: Optional[int] = None) -> List[Synthesis]:
+        reqs = list(requests)
+        n = workers or self.batch_workers
+        if len(reqs) <= 1 or n <= 1:
+            return [self.evaluate(r) for r in reqs]
+        with ThreadPoolExecutor(max_workers=min(n, len(reqs))) as pool:
+            return list(pool.map(self.evaluate, reqs))
+
+
+# ----------------------------------------------------------------------
+# Caches
+# ----------------------------------------------------------------------
+class OracleCache(Protocol):
+    """Pluggable persistence for oracle results (keyed by knob point)."""
+
+    def entries(self) -> Dict[Key, Synthesis]: ...
+
+    def put(self, key: Key, synth: Synthesis) -> None: ...
+
+
+def _synth_to_json(s: Synthesis) -> Dict[str, Any]:
+    return {"lam": s.lam, "area": s.area, "ports": s.ports,
+            "unrolls": s.unrolls, "states": s.states_per_iter,
+            "feasible": s.feasible, "detail": dict(s.detail)}
+
+
+def _synth_from_json(d: Dict[str, Any]) -> Synthesis:
+    return Synthesis(lam=d["lam"], area=d["area"], ports=d["ports"],
+                     unrolls=d["unrolls"], states_per_iter=d["states"],
+                     feasible=d["feasible"], detail=dict(d["detail"]))
+
+
+class PersistentOracleCache:
+    """Synthesis results persisted via :mod:`repro.checkpoint.store`.
+
+    Each flush writes the *whole* cache as one atomic checkpoint step
+    (store's rename protocol: a crash leaves the previous complete step,
+    never a torn one), then prunes older steps.  A killed DSE run that
+    restarts with the same ``root`` resumes with every flushed
+    invocation served from here.  Flushes are batched (a full rewrite
+    per put would be O(n^2) disk I/O): a hard kill can lose at most the
+    last ``flush_every - 1`` points — they are simply re-invoked on
+    resume — and the ledger flushes the remainder when a session
+    completes.  Set ``flush_every=1`` for per-invocation durability.
+    """
+
+    def __init__(self, root: str, *, flush_every: int = 16, keep: int = 2):
+        self.root = root
+        self.flush_every = max(1, flush_every)
+        self.keep = max(1, keep)
+        self._entries: Dict[Key, Synthesis] = {}
+        self._dirty = 0
+        self._lock = threading.Lock()
+        self._load()
+
+    # -- store glue ----------------------------------------------------
+    @staticmethod
+    def _store():
+        from ..checkpoint import store       # lazy: store imports jax
+        return store
+
+    def _load(self) -> None:
+        import numpy as np
+        store = self._store()
+        step = store.latest_step(self.root)
+        if step is None:
+            return
+        _, extra = store.restore(self.root, step,
+                                 {"n_entries": np.asarray(0)})
+        for rec in extra.get("entries", []):
+            comp, unrolls, ports, max_states = rec["key"]
+            key = (comp, int(unrolls), int(ports),
+                   None if max_states is None else int(max_states))
+            self._entries[key] = _synth_from_json(rec["synth"])
+
+    def flush(self) -> None:
+        with self._lock:
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
+        if self._dirty == 0:
+            return
+        import numpy as np
+        store = self._store()
+        step = (store.latest_step(self.root) or 0) + 1
+        payload = [{"key": list(k), "synth": _synth_to_json(s)}
+                   for k, s in self._entries.items()]
+        store.save(self.root, step,
+                   {"n_entries": np.asarray(len(payload))},
+                   extra={"entries": payload})
+        self._dirty = 0
+        for old in store.list_steps(self.root)[:-self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{old:08d}"),
+                          ignore_errors=True)
+
+    # -- OracleCache protocol ------------------------------------------
+    def entries(self) -> Dict[Key, Synthesis]:
+        with self._lock:
+            return dict(self._entries)
+
+    def put(self, key: Key, synth: Synthesis) -> None:
+        with self._lock:
+            self._entries[key] = synth
+            self._dirty += 1
+            if self._dirty >= self.flush_every:
+                self._flush_locked()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+# ----------------------------------------------------------------------
+# The ledger
+# ----------------------------------------------------------------------
+class OracleLedger:
+    """Invocation accounting + caching around any oracle or legacy tool.
+
+    Semantics are exactly the old ``CountingTool``'s (Section 7.3 /
+    Fig. 11): repeated invocations with identical knobs are served from
+    cache and NOT counted; failed syntheses (lambda-constraint discards)
+    ARE counted.  On top of that:
+
+      * thread-safe, with in-flight de-duplication — two workers racing
+        on the same knob point trigger ONE tool call, so batched and
+        sequential drives count identically;
+      * ``evaluate_batch`` fans independent points out over a pool;
+      * every real call appends an :class:`InvocationRecord`;
+      * an optional :class:`OracleCache` pre-seeds the in-memory cache
+        (counts are reconstructed from it, one per persisted point, so a
+        resumed run reports the same totals as an uninterrupted one) and
+        receives every new result.
+    """
+
+    def __init__(self, tool, *, cache: Optional[OracleCache] = None,
+                 workers: int = 8):
+        self.tool = tool
+        self.workers = max(1, workers)
+        self.invocations: Dict[str, int] = {}
+        self.failed: Dict[str, int] = {}
+        self.records: List[InvocationRecord] = []
+        self.phase: str = ""
+        self._cache: Dict[Key, Synthesis] = {}
+        self._persist = cache
+        self._lock = threading.Lock()
+        self._inflight: Dict[Key, threading.Event] = {}
+        self._errors: Dict[Key, BaseException] = {}
+        if cache is not None:
+            # reconstruct the accounting one-for-one from the persisted
+            # points, so a resumed run reports the same totals (and the
+            # same per-phase record sums) as an uninterrupted one
+            for key, synth in cache.entries().items():
+                self._cache[key] = synth
+                comp = key[0]
+                self.invocations[comp] = self.invocations.get(comp, 0) + 1
+                if not synth.feasible:
+                    self.failed[comp] = self.failed.get(comp, 0) + 1
+                self.records.append(InvocationRecord(
+                    component=comp, unrolls=key[1], ports=key[2],
+                    max_states=key[3], feasible=synth.feasible,
+                    lam=synth.lam, area=synth.area, phase="restored"))
+
+    # ------------------------------------------------------------------
+    def _call_tool(self, req: InvocationRequest) -> Synthesis:
+        tool = self.tool
+        if hasattr(tool, "synthesize"):
+            return tool.synthesize(req.component, unrolls=req.unrolls,
+                                   ports=req.ports,
+                                   max_states=req.max_states)
+        return tool.evaluate(req)
+
+    def evaluate(self, request: InvocationRequest) -> Synthesis:
+        key = request.key
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                return hit
+            ev = self._inflight.get(key)
+            if ev is None:
+                ev = threading.Event()
+                self._inflight[key] = ev
+                self._errors.pop(key, None)      # a retry clears old failure
+                owner = True
+                # counted up-front, like the seed's CountingTool
+                comp = request.component
+                self.invocations[comp] = self.invocations.get(comp, 0) + 1
+            else:
+                owner = False
+        if not owner:
+            ev.wait()
+            with self._lock:
+                out = self._cache.get(key)
+                err = self._errors.get(key)
+            if out is None:
+                if err is not None:
+                    raise RuntimeError(
+                        f"oracle invocation failed for {key}") from err
+                raise RuntimeError(f"oracle invocation failed for {key}")
+            return out
+        t0 = time.monotonic()
+        try:
+            out = self._call_tool(request)
+        except BaseException as exc:
+            with self._lock:
+                self._errors[key] = exc
+                self._inflight.pop(key, None)
+            ev.set()
+            raise
+        with self._lock:
+            if not out.feasible:
+                comp = request.component
+                self.failed[comp] = self.failed.get(comp, 0) + 1
+            self._cache[key] = out
+            self.records.append(InvocationRecord(
+                component=request.component, unrolls=request.unrolls,
+                ports=request.ports, max_states=request.max_states,
+                feasible=out.feasible, lam=out.lam, area=out.area,
+                phase=self.phase, wall_s=time.monotonic() - t0))
+            self._inflight.pop(key, None)
+        ev.set()
+        if self._persist is not None:
+            self._persist.put(key, out)
+        return out
+
+    def evaluate_batch(self, requests: Sequence[InvocationRequest],
+                       *, workers: Optional[int] = None) -> List[Synthesis]:
+        """Evaluate independent knob points, fanned out over a pool.
+
+        Results come back in request order; duplicate keys inside the
+        batch (and races with other concurrent callers) collapse to one
+        tool call via the in-flight de-duplication in ``evaluate``.
+        """
+        reqs = list(requests)
+        n = self.workers if workers is None else max(1, workers)
+        if len(reqs) <= 1 or n <= 1:
+            return [self.evaluate(r) for r in reqs]
+        with ThreadPoolExecutor(max_workers=min(n, len(reqs))) as pool:
+            return list(pool.map(self.evaluate, reqs))
+
+    # ------------------------------------------------------------------
+    # Legacy CountingTool surface (the whole seed engine drives this)
+    # ------------------------------------------------------------------
+    def synthesize(self, component: str, *, unrolls: int, ports: int,
+                   max_states: Optional[int] = None) -> Synthesis:
+        return self.evaluate(InvocationRequest(
+            component=component, unrolls=unrolls, ports=ports,
+            max_states=max_states))
+
+    def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts:
+        return self.tool.cdfg_facts(component, synth)
+
+    def total(self, component: Optional[str] = None) -> int:
+        if component is not None:
+            return self.invocations.get(component, 0)
+        return sum(self.invocations.values())
+
+    def flush(self) -> None:
+        if self._persist is not None:
+            self._persist.flush()
+
+    def records_by_phase(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.records:
+            out[r.phase or "?"] = out.get(r.phase or "?", 0) + 1
+        return out
+
+
+class CountingTool(OracleLedger):
+    """Legacy name for :class:`OracleLedger` (the seed's published API).
+
+    Construction (``CountingTool(tool)``) and the ``synthesize`` /
+    ``invocations`` / ``failed`` / ``total`` surface are unchanged.
+    """

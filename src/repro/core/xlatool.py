@@ -32,6 +32,7 @@ from typing import Dict, Optional
 from ..configs.base import ModelConfig, ShapeSpec
 from .autotune import HBM_BYTES_PER_CHIP, price_train_step
 from .knobs import CDFGFacts, Synthesis
+from .oracle import OracleBatchMixin
 
 __all__ = ["XLATool", "BASE_CHIPS", "MAX_UNROLL"]
 
@@ -42,8 +43,13 @@ _HBM_BW = 819e9
 _ICI_BW = 50e9
 
 
-class XLATool:
-    """SynthesisTool whose components are (ModelConfig, ShapeSpec) stages."""
+class XLATool(OracleBatchMixin):
+    """SynthesisTool whose components are (ModelConfig, ShapeSpec) stages.
+
+    Adapts directly to the batched ``Oracle`` protocol via
+    :class:`~repro.core.oracle.OracleBatchMixin` — pricing is pure, so
+    independent fleet-share/microbatch points fan out concurrently.
+    """
 
     def __init__(self, components: Dict[str, tuple], *, tp: int = 16,
                  hbm_budget: int = HBM_BYTES_PER_CHIP):

@@ -1,0 +1,71 @@
+"""Blockwise int8 quantization + error-feedback gradient compression.
+
+Quantization is absmax-per-block (the bound the tests assert:
+|x - dequant(quant(x))| <= absmax/127 per block).  Error feedback keeps
+the quantization residue and folds it into the next step's gradient, so
+the long-run gradient sum is preserved (EF-SGD argument); the train step
+applies it to the gradient tree right before the (simulated) all-reduce.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_blockwise", "dequantize_blockwise", "ef_compress",
+           "ef_compress_tree"]
+
+
+def quantize_blockwise(x: jnp.ndarray, block: int = 256, *,
+                       bits: int = 8) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize to int8 with one absmax scale per ``block`` elements.
+
+    Returns ``(q, scales)`` with ``q`` shaped (n_blocks, block) — padded
+    with zeros past the original size — and ``scales`` shaped (n_blocks,).
+    """
+    qmax = (1 << (bits - 1)) - 1
+    flat = x.reshape(-1)
+    n = flat.size
+    n_blocks = max(1, -(-n // block))
+    pad = n_blocks * block - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(n_blocks, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    scales = absmax / qmax
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -qmax, qmax)
+    return q.astype(jnp.int8), scales.astype(jnp.float32)
+
+
+def dequantize_blockwise(q: jnp.ndarray, scales: jnp.ndarray,
+                         shape: Tuple[int, ...]) -> jnp.ndarray:
+    y = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    return y[: math.prod(shape) if shape else 1].reshape(shape)
+
+
+def ef_compress(g: jnp.ndarray, err: Optional[jnp.ndarray] = None, *,
+                bits: int = 8) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compress ``g`` (+ carried-in error) and return (g_hat, new error).
+
+    Invariant: g_hat + new_error == g + carried_error (up to float eps),
+    which is what makes the long-run gradient sum exact.
+    """
+    target = g if err is None else g + err
+    q, s = quantize_blockwise(target, bits=bits)
+    g_hat = dequantize_blockwise(q, s, target.shape).astype(g.dtype)
+    return g_hat, (target - g_hat).astype(g.dtype)
+
+
+def ef_compress_tree(tree: Any, err_tree: Optional[Any] = None, *,
+                     bits: int = 8) -> Tuple[Any, Any]:
+    """``ef_compress`` over a gradient pytree; returns (g_hat, errors)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    errs = (jax.tree.leaves(err_tree) if err_tree is not None
+            else [None] * len(leaves))
+    pairs = [ef_compress(g, e, bits=bits) for g, e in zip(leaves, errs)]
+    return (jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+            jax.tree.unflatten(treedef, [p[1] for p in pairs]))

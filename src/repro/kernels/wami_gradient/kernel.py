@@ -27,6 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+if not hasattr(pltpu, "CompilerParams"):   # jax < 0.5: old class name
+    pltpu.CompilerParams = pltpu.TPUCompilerParams
+
 __all__ = ["gradient_kernel", "vmem_bytes", "grid_steps"]
 
 

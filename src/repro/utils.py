@@ -1,0 +1,41 @@
+"""Small cross-cutting helpers (version compatibility shims)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+__all__ = ["keystr_path"]
+
+
+def _keystr_fallback(kp: Any) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):          # DictKey
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):        # SequenceKey / FlattenedIndexKey
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):       # GetAttrKey
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+try:
+    jax.tree_util.keystr((), simple=True, separator="/")
+    _HAVE_SIMPLE = True
+except TypeError:                      # jax < 0.4.38
+    _HAVE_SIMPLE = False
+
+
+def keystr_path(kp: Any) -> str:
+    """'a/b/0'-style path string for a tree_flatten_with_path key path.
+
+    Equivalent to ``jax.tree_util.keystr(kp, simple=True, separator="/")``
+    on new jax; hand-rolled on versions whose keystr lacks the kwargs.
+    """
+    if _HAVE_SIMPLE:
+        return jax.tree_util.keystr(kp, simple=True, separator="/")
+    return _keystr_fallback(kp)

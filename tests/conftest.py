@@ -3,9 +3,67 @@
 NOTE: XLA_FLAGS / device-count forcing deliberately NOT set here — smoke
 tests and benches run on the single real CPU device; only
 launch/dryrun.py (its own process) forces 512 host devices.
+
+When ``hypothesis`` is not installed (it is a test extra, not a runtime
+dependency), a stub is installed into ``sys.modules`` BEFORE collection
+so the property-test modules still import: every ``@given`` test body is
+replaced with a clean ``pytest.skip`` and the rest of each module runs
+normally.  ``pip install -e .[test]`` restores the real property tests.
 """
 
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import types
+
+    import pytest
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg replacement: pytest must not see the strategy
+            # parameters, or it would try to resolve them as fixtures
+            def _skipped_property_test():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -e .[test])")
+            _skipped_property_test.__name__ = fn.__name__
+            _skipped_property_test.__doc__ = fn.__doc__
+            _skipped_property_test.__module__ = fn.__module__
+            return _skipped_property_test
+        return deco
+
+    def _passthrough(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategy:
+        """Inert placeholder for strategy objects built at import time."""
+
+        def __init__(self, name="st"):
+            self._name = name
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, item):
+            return _Strategy(f"{self._name}.{item}")
+
+        def __repr__(self):
+            return f"<{self._name} stub>"
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: _Strategy(f"st.{name}")
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _passthrough
+    _hyp.example = _passthrough
+    _hyp.assume = lambda *a, **k: True
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

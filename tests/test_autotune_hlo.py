@@ -6,8 +6,9 @@ import pytest
 from jax import lax
 
 from repro.configs import SHAPES, get_config
-from repro.core.autotune import (HBM_BYTES_PER_CHIP, choose_train_knobs,
-                                 price_train_step)
+from repro.core.autotune import (HBM_BYTES_PER_CHIP, XLAOracle,
+                                 choose_train_knobs, price_train_step)
+from repro.core.oracle import OracleLedger
 from repro.launch.hlo_analysis import (CollectiveStats, analyze_hlo,
                                        parse_collectives, roofline_terms)
 from repro.optim import (AdamWConfig, apply_updates, apply_updates_q8,
@@ -39,6 +40,43 @@ def test_choose_knobs_reports_honest_deficit():
     plan = choose_train_knobs(get_config("kimi-k2-1t-a32b"), TRAIN, MESH)
     assert plan.est_bytes > HBM_BYTES_PER_CHIP
     assert not plan.fits
+
+
+def test_choose_knobs_matches_manual_ladder_walk():
+    """The XLAOracle walk must reproduce the seed's sequential ladder."""
+    from repro.core.autotune import _LADDER, _mesh_sizes
+    for arch in ("gemma2-9b", "zamba2-2.7b", "kimi-k2-1t-a32b"):
+        cfg = get_config(arch)
+        accum = "bfloat16" if cfg.param_count() > 30e9 else "float32"
+        dp, _ = _mesh_sizes(MESH)
+        want = None
+        for rung in _LADDER:
+            if TRAIN.global_batch // dp < rung["microbatches"]:
+                break
+            plan = price_train_step(cfg, TRAIN, MESH,
+                                    microbatches=rung["microbatches"],
+                                    remat=rung["remat"], accum_dtype=accum)
+            want = plan
+            if plan.est_bytes <= HBM_BYTES_PER_CHIP * 0.90:
+                break
+        got = choose_train_knobs(cfg, TRAIN, MESH)
+        assert got == want, arch
+
+
+def test_choose_knobs_shared_ledger_caches_replans():
+    """Planning the same stage twice through one ledger is free."""
+    led = OracleLedger(XLAOracle())
+    choose_train_knobs(get_config("gemma2-9b"), TRAIN, MESH, ledger=led)
+    n = led.total()
+    assert n > 0
+    plan = choose_train_knobs(get_config("gemma2-9b"), TRAIN, MESH,
+                              ledger=led)
+    assert led.total() == n               # all rungs were cache hits
+    assert plan == choose_train_knobs(get_config("gemma2-9b"), TRAIN, MESH)
+    # a mesh change is a new stage: characterization-style re-pricing
+    choose_train_knobs(get_config("gemma2-9b"), TRAIN,
+                       {"data": 8, "model": 16}, ledger=led)
+    assert led.total() > n
 
 
 def test_remat_ladder_ordering():

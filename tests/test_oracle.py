@@ -1,0 +1,191 @@
+"""The unified oracle layer: ledger parity, batching, persistence."""
+
+import os
+import threading
+
+import pytest
+
+from repro.core import (CountingTool, HLSTool, InvocationRequest, KnobSpace,
+                        OracleLedger, PersistentOracleCache, cosmos_dse,
+                        exhaustive_dse, pipeline_tmg)
+from repro.core.hlsim import ComponentSpec, LoopNest
+
+
+class SpyTool(HLSTool):
+    """HLSTool that counts *real* synthesis calls reaching the backend."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.calls = 0
+        self._call_lock = threading.Lock()
+
+    def synthesize(self, *args, **kwargs):
+        with self._call_lock:
+            self.calls += 1
+        return super().synthesize(*args, **kwargs)
+
+
+def _specs():
+    return {
+        "a": ComponentSpec("a", LoopNest(256, 2, 1, 8, 3, 6), 1024, 1024),
+        "b": ComponentSpec("b", LoopNest(512, 4, 2, 16, 5, 10), 2048, 1024),
+        "c": ComponentSpec("c", LoopNest(128, 1, 1, 4, 2, 4), 512, 512),
+    }
+
+
+def _spaces(specs, max_ports=8, max_unrolls=16):
+    return {n: KnobSpace(clock_ns=1.0, max_ports=max_ports,
+                         max_unrolls=max_unrolls) for n in specs}
+
+
+# ----------------------------------------------------------------------
+# CountingTool-parity semantics
+# ----------------------------------------------------------------------
+def test_repeats_are_cached_and_uncounted():
+    tool = SpyTool(_specs())
+    led = OracleLedger(tool)
+    s1 = led.synthesize("a", unrolls=4, ports=2)
+    s2 = led.synthesize("a", unrolls=4, ports=2)
+    assert s1 is s2                       # served from cache
+    assert led.total("a") == 1
+    assert tool.calls == 1
+    # different max_states is a different knob point
+    led.synthesize("a", unrolls=4, ports=2, max_states=99)
+    assert led.total("a") == 2
+
+
+def test_failures_are_counted():
+    led = OracleLedger(HLSTool(_specs(), noise=0.0))
+    out = led.synthesize("a", unrolls=16, ports=1, max_states=1)
+    assert not out.feasible
+    assert led.total("a") == 1
+    assert led.failed["a"] == 1
+    # the infeasible point is cached too (repeat uncounted)
+    led.synthesize("a", unrolls=16, ports=1, max_states=1)
+    assert led.total("a") == 1
+
+
+def test_countingtool_is_the_ledger():
+    """The legacy name keeps the seed's construction + surface."""
+    ct = CountingTool(HLSTool(_specs()))
+    assert isinstance(ct, OracleLedger)
+    ct.synthesize("a", unrolls=2, ports=2)
+    assert ct.invocations == {"a": 1}
+    assert ct.total() == 1
+
+
+def test_inflight_dedup_under_concurrency():
+    """N threads racing on one knob point trigger ONE backend call."""
+    tool = SpyTool(_specs())
+    led = OracleLedger(tool)
+    req = InvocationRequest(component="a", unrolls=4, ports=2)
+    barrier = threading.Barrier(8)
+    outs = []
+
+    def hammer():
+        barrier.wait()
+        outs.append(led.evaluate(req))
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert tool.calls == 1
+    assert led.total("a") == 1
+    assert all(o is outs[0] for o in outs)
+
+
+def test_records_are_per_real_invocation():
+    led = OracleLedger(HLSTool(_specs()))
+    led.phase = "characterize"
+    led.synthesize("a", unrolls=2, ports=2)
+    led.synthesize("a", unrolls=2, ports=2)      # cache hit: no record
+    led.phase = "map"
+    led.synthesize("b", unrolls=4, ports=4)
+    assert len(led.records) == 2
+    assert led.records_by_phase() == {"characterize": 1, "map": 1}
+    r = led.records[0]
+    assert (r.component, r.unrolls, r.ports, r.feasible) == ("a", 2, 2, True)
+
+
+# ----------------------------------------------------------------------
+# Batched vs serial determinism
+# ----------------------------------------------------------------------
+def test_exhaustive_batched_matches_serial():
+    specs = _specs()
+    spaces = _spaces(specs)
+    e1 = exhaustive_dse(list(specs), HLSTool(dict(specs)), spaces, workers=1)
+    e8 = exhaustive_dse(list(specs), HLSTool(dict(specs)), spaces, workers=8)
+    assert e1.invocations == e8.invocations
+    assert repr(e1.points) == repr(e8.points)
+    assert repr(e1.fronts) == repr(e8.fronts)
+
+
+def test_cosmos_batched_matches_serial():
+    specs = _specs()
+    spaces = _spaces(specs)
+    tmg = pipeline_tmg(list(specs), buffers=2)
+    r1 = cosmos_dse(tmg, HLSTool(dict(specs)), spaces, delta=0.3, workers=1)
+    r8 = cosmos_dse(tmg, HLSTool(dict(specs)), spaces, delta=0.3, workers=8)
+    assert r1.invocations == r8.invocations
+    assert repr(r1.planned) == repr(r8.planned)
+    assert repr(r1.mapped) == repr(r8.mapped)
+    assert repr(r1.pareto()) == repr(r8.pareto())
+
+
+def test_evaluate_batch_preserves_order_and_dedupes():
+    tool = SpyTool(_specs())
+    led = OracleLedger(tool, workers=4)
+    reqs = [InvocationRequest("a", unrolls=u, ports=2) for u in (2, 3, 2, 4)]
+    outs = led.evaluate_batch(reqs)
+    assert [o.unrolls for o in outs] == [2, 3, 2, 4]
+    assert tool.calls == 3               # the duplicate collapsed
+    assert led.total("a") == 3
+
+
+# ----------------------------------------------------------------------
+# Persistent cache: kill/restart resumes with zero re-invocations
+# ----------------------------------------------------------------------
+def test_persistent_cache_resume(tmp_path):
+    specs = _specs()
+    spaces = _spaces(specs, max_ports=4, max_unrolls=8)
+    tmg = pipeline_tmg(list(specs), buffers=2)
+    root = os.path.join(tmp_path, "oracle-cache")
+
+    t1 = SpyTool(dict(specs))
+    r1 = cosmos_dse(tmg, t1, spaces, delta=0.3,
+                    cache=PersistentOracleCache(root), workers=4)
+    assert t1.calls > 0
+
+    # "restart": fresh tool, fresh ledger, same cache root
+    t2 = SpyTool(dict(specs))
+    r2 = cosmos_dse(tmg, t2, spaces, delta=0.3,
+                    cache=PersistentOracleCache(root), workers=4)
+    assert t2.calls == 0                  # zero re-invocations
+    assert repr(r1.mapped) == repr(r2.mapped)
+    assert r1.invocations == r2.invocations   # counts reconstructed
+
+
+def test_persistent_cache_partial_resume(tmp_path):
+    """A run killed mid-way re-invokes only the missing points and the
+    final counts match an uninterrupted run."""
+    specs = _specs()
+    spaces = _spaces(specs, max_ports=4, max_unrolls=8)
+    root = os.path.join(tmp_path, "cache")
+
+    # pay for a few points (flushed every put), then "die"
+    led = OracleLedger(SpyTool(dict(specs)),
+                       cache=PersistentOracleCache(root, flush_every=1))
+    led.synthesize("a", unrolls=1, ports=1)
+    led.synthesize("a", unrolls=2, ports=2)
+
+    tmg = pipeline_tmg(list(specs), buffers=2)
+    t_ref = SpyTool(dict(specs))
+    ref = cosmos_dse(tmg, t_ref, spaces, delta=0.3)
+    t_res = SpyTool(dict(specs))
+    res = cosmos_dse(tmg, t_res, spaces, delta=0.3,
+                     cache=PersistentOracleCache(root))
+    assert t_res.calls < t_ref.calls      # resumed run paid less
+    assert repr(ref.mapped) == repr(res.mapped)
+    assert ref.invocations == res.invocations

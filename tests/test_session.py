@@ -1,0 +1,142 @@
+"""ExplorationSession: phases, events, serialization, WAMI acceptance."""
+
+import os
+
+import pytest
+
+from repro.apps.wami import (wami_cosmos, wami_hls_tool, wami_knob_spaces,
+                             wami_session, wami_tmg, WAMI_KNOB_TABLE,
+                             MATRIX_INV_LATENCY_S)
+from repro.core import (ExplorationSession, HLSTool, KnobSpace, OracleLedger,
+                        PersistentOracleCache, pipeline_tmg)
+from repro.core.hlsim import ComponentSpec, LoopNest
+
+
+def _system():
+    specs = {
+        "a": ComponentSpec("a", LoopNest(256, 2, 1, 8, 3, 6), 1024, 1024),
+        "b": ComponentSpec("b", LoopNest(128, 1, 1, 4, 2, 4), 512, 512),
+    }
+    tmg = pipeline_tmg(list(specs), buffers=2)
+    spaces = {n: KnobSpace(clock_ns=1.0, max_ports=4, max_unrolls=8)
+              for n in specs}
+    return specs, tmg, spaces
+
+
+# ----------------------------------------------------------------------
+# Phase API + events
+# ----------------------------------------------------------------------
+def test_explicit_phases():
+    specs, tmg, spaces = _system()
+    s = ExplorationSession(tmg, HLSTool(dict(specs)), spaces, delta=0.3)
+    chars = s.characterize()
+    assert set(chars) == set(specs)
+    char_invocations = s.ledger.total()
+    assert char_invocations > 0
+    planned = s.plan()
+    assert s.ledger.total() == char_invocations   # planning is LP-only
+    assert len(planned) >= 2
+    mapped = s.map()
+    assert len(mapped) == len(planned)
+    res = s.result()
+    assert res.total_invocations == s.ledger.total()
+
+
+def test_progress_events():
+    specs, tmg, spaces = _system()
+    events = []
+    s = ExplorationSession(tmg, HLSTool(dict(specs)), spaces, delta=0.3,
+                           on_event=events.append)
+    s.run()
+    phases = [e.phase for e in events]
+    # phases appear in order and each completes
+    assert phases.index("characterize") < phases.index("plan") < phases.index("map")
+    chars = [e for e in events if e.phase == "characterize" and e.done]
+    assert {e.label for e in chars} == set(specs)
+    maps = [e for e in events if e.phase == "map" and e.done]
+    assert maps[-1].done == maps[-1].total == len(s.planned)
+
+
+def test_result_before_map_raises():
+    specs, tmg, spaces = _system()
+    s = ExplorationSession(tmg, HLSTool(dict(specs)), spaces)
+    with pytest.raises(RuntimeError):
+        s.result()
+
+
+# ----------------------------------------------------------------------
+# Mid-run serialize / restore
+# ----------------------------------------------------------------------
+def test_save_restore_after_characterize(tmp_path):
+    specs, tmg, spaces = _system()
+    root = os.path.join(tmp_path, "session")
+    s1 = ExplorationSession(tmg, HLSTool(dict(specs)), spaces, delta=0.3)
+    s1.characterize()
+    s1.save(root)
+    ref = s1.run()
+
+    s2 = ExplorationSession.restore(root, tmg, HLSTool(dict(specs)),
+                                    spaces, delta=0.3)
+    assert s2.characterizations is not None
+    # restored regions/points are exactly the originals
+    assert repr(s2.characterizations) == repr(s1.characterizations)
+    res = s2.run()
+    assert repr(res.mapped) == repr(ref.mapped)
+    # only the mapping invocations were re-paid
+    assert s2.ledger.total() < s1.ledger.total()
+
+
+def test_restore_with_persistent_cache_reinvokes_nothing(tmp_path):
+    specs, tmg, spaces = _system()
+    sroot = os.path.join(tmp_path, "session")
+    croot = os.path.join(tmp_path, "cache")
+    s1 = ExplorationSession(tmg, HLSTool(dict(specs)), spaces, delta=0.3,
+                            cache=PersistentOracleCache(croot))
+    ref = s1.run()
+    s1.save(sroot)
+
+    calls = []
+
+    class Spy(HLSTool):
+        def synthesize(self, *a, **k):
+            calls.append(a)
+            return super().synthesize(*a, **k)
+
+    s2 = ExplorationSession.restore(sroot, tmg, Spy(dict(specs)), spaces,
+                                    delta=0.3,
+                                    cache=PersistentOracleCache(croot))
+    res = s2.run()
+    assert calls == []                    # nothing re-invoked
+    assert repr(res.mapped) == repr(ref.mapped)
+    assert res.invocations == ref.invocations
+
+
+# ----------------------------------------------------------------------
+# Acceptance: WAMI batched == sequential, through the session API
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("workers", [4])
+def test_wami_batched_identical_to_sequential(workers):
+    seq = wami_cosmos(delta=0.25, workers=1)
+    par = wami_cosmos(delta=0.25, workers=workers)
+    assert seq.invocations == par.invocations
+    assert repr(seq.planned) == repr(par.planned)
+    assert repr(seq.mapped) == repr(par.mapped)
+    assert repr(seq.pareto()) == repr(par.pareto())
+    assert (seq.theta_min, seq.theta_max) == (par.theta_min, par.theta_max)
+
+
+def test_wami_session_object_api():
+    s = wami_session(delta=0.25, workers=8)
+    chars = s.characterize()
+    assert set(chars) == set(WAMI_KNOB_TABLE)     # 12 components, no matrix_inv
+    assert "matrix_inv" not in chars
+    res = s.run()
+    assert len(res.mapped) >= 5
+
+
+def test_knob_table_matches_knob_spaces():
+    spaces = wami_knob_spaces()
+    assert set(spaces) == set(WAMI_KNOB_TABLE)
+    for name, (max_ports, max_unrolls) in WAMI_KNOB_TABLE.items():
+        assert spaces[name].max_ports == max_ports
+        assert spaces[name].max_unrolls == max_unrolls
