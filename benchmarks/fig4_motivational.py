@@ -18,34 +18,59 @@ from repro.core import InvocationRequest, HLSTool, OracleLedger, span
 from repro.kernels.wami_gradient import grid_steps, vmem_bytes
 
 
-def run(report) -> None:
-    comps = build_components()
-    tool = OracleLedger(HLSTool({"gradient": comps["gradient"].spec()}),
-                        workers=8)
-    space = wami_knob_space("gradient")       # canonical Table-1 bounds
+def _gradient_rows(backend: str):
+    """The priced (ports x unrolls) points of the Gradient component.
 
-    t0 = time.time()
-    requests = [InvocationRequest("gradient", unrolls=unrolls, ports=ports)
-                for ports in space.ports()
-                for unrolls in range(max(1, ports), space.max_unrolls + 1)]
+    ``analytical`` sweeps the full Table-1 knob space through the HLS
+    model.  ``pallas`` replays the *measured* points of the checked-in
+    recording through a :class:`PallasOracle` — the subset the COSMOS
+    drive actually paid for (exhaustively measuring the space is exactly
+    what the paper's methodology avoids).
+    """
+    space = wami_knob_space("gradient")       # canonical Table-1 bounds
+    if backend == "pallas":
+        from repro.apps.wami.pallas import wami_pallas_oracle
+        oracle = wami_pallas_oracle("replay")
+        tool = OracleLedger(oracle, workers=8)
+        keys = sorted(k for k in oracle.store.entries if k[0] == "gradient")
+        requests = [InvocationRequest("gradient", unrolls=u, ports=p)
+                    for _, p, u in keys]
+        unit = ("lam_ms", "area_bytes", 1e3)
+    else:
+        comps = build_components()
+        tool = OracleLedger(HLSTool({"gradient": comps["gradient"].spec()}),
+                            workers=8)
+        requests = [InvocationRequest("gradient", unrolls=unrolls,
+                                      ports=ports)
+                    for ports in space.ports()
+                    for unrolls in range(max(1, ports),
+                                         space.max_unrolls + 1)]
+        unit = ("lam_ms", "area_mm2", 1e3)
     rows: List[Dict] = []
     for req, s in zip(requests, tool.evaluate_batch(requests)):
         if s.feasible:
             rows.append({"ports": req.ports, "unrolls": req.unrolls,
-                         "lam_ms": s.lam * 1e3, "area_mm2": s.area})
+                         "lam_ms": s.lam * unit[2], "area": s.area})
+    return rows, unit
+
+
+def run(report, backend: str = "analytical") -> None:
+    t0 = time.time()
+    rows, (lam_col, area_col, _) = _gradient_rows(backend)
     wall = time.time() - t0
 
     all_lam = [r["lam_ms"] for r in rows]
-    all_area = [r["area_mm2"] for r in rows]
+    all_area = [r["area"] for r in rows]
     dual = [r for r in rows if r["ports"] == 2]
     lam_span, area_span = span(all_lam), span(all_area)
-    lam_dual = span([r["lam_ms"] for r in dual])
-    area_dual = span([r["area_mm2"] for r in dual])
+    lam_dual = span([r["lam_ms"] for r in dual]) if dual else 1.0
+    area_dual = span([r["area"] for r in dual]) if dual else 1.0
 
-    lines = [f"# Fig. 4 — Gradient design space ({len(rows)} syntheses)",
-             "ports,unrolls,lam_ms,area_mm2"]
+    lines = [f"# Fig. 4 — Gradient design space ({len(rows)} syntheses, "
+             f"backend={backend})",
+             f"ports,unrolls,{lam_col},{area_col}"]
     lines += [f"{r['ports']},{r['unrolls']},{r['lam_ms']:.4f},"
-              f"{r['area_mm2']:.4f}" for r in rows]
+              f"{r['area']:.4f}" for r in rows]
     lines.append(f"# span with memory co-design: lambda {lam_span:.2f}x, "
                  f"area {area_span:.2f}x (paper: 7.9x / 3.7x)")
     lines.append(f"# span dual-port only:        lambda {lam_dual:.2f}x, "
@@ -57,6 +82,10 @@ def run(report) -> None:
             lines.append(f"# {ports},{unrolls},"
                          f"{vmem_bytes(512, 512, ports=ports, unrolls=unrolls)},"
                          f"{grid_steps(512, 512, ports=ports, unrolls=unrolls)}")
-    report.write("fig4_motivational", lines)
-    report.csv("fig4_gradient_space", wall * 1e6 / max(1, len(rows)),
+    name = ("fig4_motivational" if backend == "analytical"
+            else f"fig4_motivational_{backend}")
+    report.write(name, lines)
+    csv_name = ("fig4_gradient_space" if backend == "analytical"
+                else f"fig4_gradient_space_{backend}")
+    report.csv(csv_name, wall * 1e6 / max(1, len(rows)),
                f"lam_span={lam_span:.2f}x_vs_dual={lam_dual:.2f}x")

@@ -1,10 +1,21 @@
-"""Kernel micro-benchmarks (CPU XLA-reference wall time + model GFLOP/s).
+"""Kernel micro-benchmarks.
 
-NOTE: wall times here are CPU-backend reference-path timings — the TPU
-kernels are validated in interpret mode and their performance is assessed
-structurally (BlockSpec working sets vs VMEM, MXU-shaped matmuls) in
-EXPERIMENTS.md §Roofline; CPU microseconds are reported only to catch
-regressions in the XLA fallback paths.
+Two backends (``--backend`` / the harness's ``--backend`` flag):
+
+  * ``analytical`` (default) — CPU XLA-reference wall time + model
+    GFLOP/s.  Wall times here are CPU-backend reference-path timings;
+    CPU microseconds are reported only to catch regressions in the XLA
+    fallback paths.
+  * ``pallas`` — every WAMI stage kernel runs through its Pallas path
+    in interpret mode and is checked against its jnp oracle; the
+    reported numbers are interpret-mode walls (structural, not TPU
+    performance) plus the parity error.  ``--smoke`` shrinks the tile
+    and exits non-zero on any parity failure — the CI gate that the
+    measured backend's kernels still compute the right thing.
+
+Standalone:
+
+    PYTHONPATH=src python benchmarks/kernels_micro.py --smoke --backend pallas
 """
 
 from __future__ import annotations
@@ -13,10 +24,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-
-from repro.kernels.flash_attention import mha
-from repro.kernels.ssd_scan import ssd
-from repro.kernels.wami_gradient import gradient
 
 
 def _time(fn, *args, reps=5, **kw):
@@ -29,10 +36,93 @@ def _time(fn, *args, reps=5, **kw):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(report) -> None:
+def _max_err(a, b):
+    fa = jnp.asarray(a, jnp.float32)
+    fb = jnp.asarray(b, jnp.float32)
+    denom = float(jnp.abs(fb).max()) or 1.0
+    return float(jnp.abs(fa - fb).max()) / max(1.0, denom)
+
+
+def _wami_pallas_cases(tile: int):
+    """(name, pallas_fn, oracle_fn, args) for every WAMI stage kernel."""
+    from repro.kernels import (wami_change_det, wami_debayer, wami_gradient,
+                               wami_grayscale, wami_steep, wami_warp)
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 7)
+    bayer = jax.random.uniform(ks[0], (tile, tile)) * 1023.0
+    rgb = jax.random.uniform(ks[1], (tile, tile, 3)) * 255.0
+    gray = jax.random.uniform(ks[2], (tile, tile)) * 255.0
+    gx = jax.random.normal(ks[3], (tile, tile))
+    gy = jax.random.normal(ks[4], (tile, tile))
+    sd = jax.random.normal(ks[5], (tile, tile, 6))
+    # shear terms small enough that every source fraction stays in
+    # ~[0.3, 0.7]: the floor() cell choice is then identical between the
+    # two compiled programs, so parity is exact instead of flipping
+    # gather cells at integer boundaries
+    p = jnp.array([1 / 1024, -1 / 2048, 0.5, 1 / 2048, -1 / 1024, 0.5],
+                  jnp.float32)
+    mu = gray[..., None] + jax.random.normal(ks[6], (tile, tile, 3)) * 8.0
+    var = jnp.full((tile, tile, 3), 36.0)
+    w = jnp.full((tile, tile, 3), 1.0 / 3.0)
+    return [
+        ("wami_debayer", wami_debayer.debayer, wami_debayer.debayer_oracle,
+         (bayer,)),
+        ("wami_grayscale", wami_grayscale.grayscale,
+         wami_grayscale.grayscale_oracle, (rgb,)),
+        ("wami_gradient", wami_gradient.gradient,
+         wami_gradient.gradient_oracle, (gray,)),
+        ("wami_steep", wami_steep.steepest_descent,
+         wami_steep.steepest_descent_oracle, (gx, gy)),
+        ("wami_hessian", wami_steep.hessian, wami_steep.hessian_oracle,
+         (sd,)),
+        ("wami_warp", wami_warp.warp_affine, wami_warp.warp_affine_oracle,
+         (gray, p)),
+        ("wami_change_det", wami_change_det.change_detection,
+         wami_change_det.change_detection_oracle, (gray, mu, var, w)),
+    ]
+
+
+def run_pallas(report, *, tile: int = 128, ports: int = 4, unrolls: int = 8,
+               reps: int = 3, tol: float = 1e-4) -> int:
+    """Interpret-mode drive of every WAMI Pallas kernel vs its oracle.
+    Returns the number of parity failures."""
+    lines = [f"# WAMI Pallas kernels, interpret mode, tile={tile}, "
+             f"ports={ports}, unrolls={unrolls}",
+             "kernel,us_per_call_interpret,max_rel_err"]
+    failures = 0
+    for name, fn, oracle, args in _wami_pallas_cases(tile):
+        got = fn(*args, ports=ports, unrolls=unrolls, use_pallas=True,
+                 interpret=True)
+        want = oracle(*args)
+        errs = [_max_err(g, w) for g, w in
+                zip(got if isinstance(got, tuple) else (got,),
+                    want if isinstance(want, tuple) else (want,))]
+        err = max(errs)
+        if err > tol:
+            failures += 1
+        us = _time(fn, *args, reps=reps, ports=ports, unrolls=unrolls,
+                   use_pallas=True, interpret=True)
+        lines.append(f"{name},{us:.0f},{err:.2e}")
+        report.csv(f"{name}_pallas", us,
+                   f"parity={'OK' if err <= tol else 'FAIL'}_{err:.1e}")
+    report.write("kernels_micro_pallas", lines)
+    return failures
+
+
+def run(report, backend: str = "analytical") -> None:
+    if backend == "pallas":
+        failures = run_pallas(report)
+        if failures:
+            raise RuntimeError(f"{failures} WAMI Pallas kernel(s) diverged "
+                               f"from their jnp oracle")
+        return
     key = jax.random.PRNGKey(0)
     lines = ["# kernel micro-benches (CPU XLA reference path)",
              "kernel,config,us_per_call,gflops_model"]
+
+    from repro.kernels.flash_attention import mha
+    from repro.kernels.ssd_scan import ssd
+    from repro.kernels.wami_gradient import gradient
 
     B, S, H, K, d = 1, 1024, 8, 2, 64
     ks = jax.random.split(key, 3)
@@ -64,3 +154,36 @@ def run(report) -> None:
                  f"{512 * 512 * 4 / us / 1e3:.1f}")
     report.csv("wami_gradient_ref", us, "stencil")
     report.write("kernels_micro", lines)
+
+
+if __name__ == "__main__":
+    import argparse
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["analytical", "pallas"],
+                    default="analytical")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small tile, 1 rep, non-zero exit on any parity "
+                         "failure (CI gate)")
+    args = ap.parse_args()
+
+    class _Report:
+        def write(self, name, lines):
+            print("\n".join(lines))
+
+        def csv(self, name, us, derived):
+            print(f"{name},{us:.1f},{derived}")
+
+    if args.backend == "pallas":
+        tile, reps = (32, 1) if args.smoke else (128, 3)
+        failures = run_pallas(_Report(), tile=tile, ports=2, unrolls=4,
+                              reps=reps)
+        if args.smoke and failures:
+            print(f"kernels-micro-smoke: FAIL — {failures} kernel(s) "
+                  f"diverged from the jnp oracle", file=sys.stderr)
+            raise SystemExit(1)
+        raise SystemExit(0)
+    run(_Report())

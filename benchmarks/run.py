@@ -37,6 +37,11 @@ class Report:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--backend", choices=["analytical", "pallas"],
+                    default="analytical",
+                    help="oracle backend for the benches that support it "
+                         "(fig4, fig10, kernels); pallas replays the "
+                         "checked-in measurement recording")
     args = ap.parse_args()
 
     from . import (autoshard_llm, fig4_motivational, fig10_pareto,
@@ -59,7 +64,11 @@ def main() -> None:
         if args.only and key != args.only:
             continue
         try:
-            mod.run(report)
+            import inspect
+            if "backend" in inspect.signature(mod.run).parameters:
+                mod.run(report, backend=args.backend)
+            else:
+                mod.run(report)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{key},ERROR,{type(e).__name__}:{e}", flush=True)

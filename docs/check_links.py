@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Markdown link checker for the repo docs (CI docs job).
+
+Verifies that every relative markdown link in README.md, DESIGN.md and
+docs/ points at a file that exists.  External (http/mailto) links and
+pure anchors are skipped; ``path#fragment`` checks only the path.
+
+    python docs/check_links.py            # default file set
+    python docs/check_links.py FILE...    # explicit files
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def default_files() -> list:
+    files = [os.path.join(_REPO, "README.md"),
+             os.path.join(_REPO, "DESIGN.md"),
+             os.path.join(_REPO, "ROADMAP.md")]
+    files += sorted(glob.glob(os.path.join(_REPO, "docs", "**", "*.md"),
+                              recursive=True))
+    return [f for f in files if os.path.exists(f)]
+
+
+def check(path: str) -> list:
+    broken = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in _LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not os.path.exists(os.path.join(base, rel)):
+                    broken.append((path, lineno, target))
+    return broken
+
+
+def main(argv: list) -> int:
+    files = argv or default_files()
+    broken = []
+    for path in files:
+        broken += check(path)
+    for path, lineno, target in broken:
+        print(f"{os.path.relpath(path, _REPO)}:{lineno}: "
+              f"broken link -> {target}", file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

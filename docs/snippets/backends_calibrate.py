@@ -1,0 +1,31 @@
+"""docs/backends.md — fit the analytical backend to measured points."""
+
+from repro.apps.wami import wami_hls_tool
+from repro.apps.wami.pallas import wami_pallas_session
+from repro.core import ExplorationSession, calibrate_to_records
+from repro.core.calibrate import CalibratedTool
+
+
+def main():
+    session = wami_pallas_session(delta=0.25, workers=8)   # measured drive
+    measured = session.run()
+
+    hls_tool = wami_hls_tool()
+    fit = calibrate_to_records(hls_tool, session.ledger.records)
+    for name, scale in sorted(fit.scales.items()):
+        print(f"{name:14s} lam x{scale:.3g} "
+              f"(residual spread x{fit.lam_spread[name]:.2f})")
+
+    calibrated = CalibratedTool(hls_tool, fit)   # lam scaled per component
+    cal_session = ExplorationSession(session.tmg, calibrated,
+                                     session.spaces, delta=0.25,
+                                     fixed=session.fixed, workers=8)
+    cal = cal_session.run()
+    print(f"measured theta range   [{measured.theta_min:.1f}, "
+          f"{measured.theta_max:.1f}] fps")
+    print(f"calibrated-model range [{cal.theta_min:.1f}, "
+          f"{cal.theta_max:.1f}] fps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""docs/backends.md — a complete minimal Oracle backend.
+
+A backend only implements ``synthesize`` + ``cdfg_facts``;
+``OracleBatchMixin`` provides the batched ``Oracle`` surface, and the
+``OracleLedger`` layers counting/caching on top.
+"""
+
+from repro.core import (CDFGFacts, InvocationRequest, OracleBatchMixin,
+                        OracleLedger, Synthesis)
+
+
+class TableBackend(OracleBatchMixin):
+    """Prices knob points from a pre-computed table (e.g. a vendor
+    characterization dump).  Pure by construction."""
+
+    def __init__(self, table):
+        # table: {(component, unrolls, ports): (lam_s, area)}
+        self.table = dict(table)
+
+    def synthesize(self, component, *, unrolls, ports, max_states=None):
+        entry = self.table.get((component, unrolls, ports))
+        if entry is None:
+            # infeasible is a RESULT (counted by the ledger), never an
+            # exception
+            return Synthesis(lam=float("inf"), area=float("inf"),
+                             ports=ports, unrolls=unrolls, feasible=False)
+        lam, area = entry
+        states = unrolls // max(1, ports) + 1
+        if max_states is not None and states > max_states:
+            return Synthesis(lam=float("inf"), area=float("inf"),
+                             ports=ports, unrolls=unrolls,
+                             states_per_iter=states, feasible=False)
+        return Synthesis(lam=lam, area=area, ports=ports, unrolls=unrolls,
+                         states_per_iter=states, feasible=True)
+
+    def cdfg_facts(self, component, synth):
+        # must be consistent with the states logic above: Algorithm 1
+        # uses h(u, p) as the max_states cap for the upper-left walk
+        return CDFGFacts(gamma_r=1, gamma_w=1, eta=1, trip=1024)
+
+
+def main():
+    table = {("stage", u, p): (1e-3 / u + 1e-4 * p, 100.0 * u + 10.0 * p)
+             for u in (1, 2, 4, 8) for p in (1, 2, 4)}
+    ledger = OracleLedger(TableBackend(table), workers=4)
+    reqs = [InvocationRequest("stage", unrolls=u, ports=2)
+            for u in (1, 2, 4, 8)]
+    for req, synth in zip(reqs, ledger.evaluate_batch(reqs)):
+        print(req.key, synth.lam, synth.area)
+    print("invocations:", ledger.total("stage"))   # 4 — dedup is free
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@ from .components import (FRAME, N_LK, TILE, WamiComponent, build_components,
                          matrix_reshape, matrix_sub, sd_update,
                          steepest_descent, warp_affine)
 from .knobs import WAMI_KNOB_TABLE, wami_knob_space
+from .pallas import (default_measurement_path, wami_pallas_components,
+                     wami_pallas_oracle, wami_pallas_session)
 from .pipeline import (MATRIX_INV_LATENCY_S, lucas_kanade, wami_app,
                        wami_cosmos, wami_exhaustive, wami_hls_tool,
                        wami_knob_spaces, wami_session, wami_tmg)
@@ -18,4 +20,6 @@ __all__ = [
     "lucas_kanade", "wami_app", "wami_tmg", "wami_hls_tool",
     "wami_knob_spaces", "wami_session", "wami_cosmos", "wami_exhaustive",
     "WAMI_KNOB_TABLE", "wami_knob_space", "MATRIX_INV_LATENCY_S",
+    "wami_pallas_components", "wami_pallas_oracle", "wami_pallas_session",
+    "default_measurement_path",
 ]

@@ -1,0 +1,152 @@
+"""The WAMI stages as a measured PallasOracle backend (DESIGN.md §2).
+
+Binds the knob-parameterized Pallas kernels under ``repro.kernels`` to
+the COSMOS component names, and builds the
+:class:`~repro.core.pallas_oracle.PallasOracle` the DSE drives instead
+of the analytical ``HLSTool``:
+
+  * seven stages are priced by *running* their kernel on a PLM-sized
+    tile (``ports`` -> lane-bank grid columns, ``unrolls`` -> rows per
+    grid step): debayer, grayscale, gradient, steepest-descent, Hessian,
+    warp, change detection;
+  * the 6x6 matrix stages (``sd_update``, ``matrix_*``) have no kernel
+    worth measuring — a (6, 6) problem never leaves one VPU tile — and
+    fall back to the analytical tool inside the same oracle, so the
+    full Fig. 8 TMG explores end-to-end;
+  * in CI there is no TPU and interpret-mode wall clocks are noise, so
+    the default mode replays the recording checked in under
+    ``artifacts/measurements/`` (regenerate:
+    ``python examples/wami_pallas.py --record``).
+
+Inputs are baked deterministically per tile size so that record and
+replay price the same physical workload.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.hlsim import HLSTool
+from ...core.pallas_oracle import (MeasurementStore, PallasKernelSpec,
+                                   PallasOracle)
+from ...core.session import ExplorationSession
+from ...kernels import (wami_change_det, wami_debayer, wami_gradient,
+                        wami_grayscale, wami_steep, wami_warp)
+from . import components as C
+from .pipeline import (MATRIX_INV_LATENCY_S, wami_hls_tool,
+                       wami_knob_spaces, wami_tmg)
+
+__all__ = ["wami_pallas_components", "wami_pallas_oracle",
+           "wami_pallas_session", "default_measurement_path"]
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "..", ".."))
+
+
+def default_measurement_path(tile: int = C.TILE) -> str:
+    return os.path.join(_REPO_ROOT, "artifacts", "measurements",
+                        f"wami_pallas_tile{tile}.json")
+
+
+def wami_pallas_components(tile: int = C.TILE
+                           ) -> Dict[str, PallasKernelSpec]:
+    """PallasKernelSpec per measurable WAMI stage, on a (tile, tile)
+    PLM-resident frame tile with deterministic baked inputs."""
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 8)
+    bayer = jax.random.uniform(ks[0], (tile, tile)) * 1023.0
+    rgb = jax.random.uniform(ks[1], (tile, tile, 3)) * 255.0
+    gray = jax.random.uniform(ks[2], (tile, tile)) * 255.0
+    gx = jax.random.normal(ks[3], (tile, tile))
+    gy = jax.random.normal(ks[4], (tile, tile))
+    sd = jax.random.normal(ks[5], (tile, tile, 6))
+    p = jnp.array([0.01, -0.005, 0.8, 0.004, -0.01, -0.6], jnp.float32)
+    mu = gray[..., None] + jax.random.normal(ks[6], (tile, tile, 3)) * 8.0
+    var = jnp.full((tile, tile, 3), 36.0, jnp.float32)
+    w = jnp.full((tile, tile, 3), 1.0 / 3.0, jnp.float32)
+
+    def bake(fn: Callable, *args) -> Callable:
+        def build(ports: int, unrolls: int, interpret: bool):
+            def run():
+                return fn(*args, ports=ports, unrolls=unrolls,
+                          use_pallas=True, interpret=interpret)
+            return run
+        return build
+
+    shape = (tile, tile)
+    return {
+        "debayer": PallasKernelSpec(
+            name="debayer", shape=shape,
+            build=bake(wami_debayer.debayer, bayer),
+            vmem_bytes=wami_debayer.vmem_bytes,
+            grid_steps=wami_debayer.grid_steps, n_in=9, n_out=3),
+        "grayscale": PallasKernelSpec(
+            name="grayscale", shape=shape,
+            build=bake(wami_grayscale.grayscale, rgb),
+            vmem_bytes=wami_grayscale.vmem_bytes,
+            grid_steps=wami_grayscale.grid_steps, n_in=3, n_out=1),
+        "gradient": PallasKernelSpec(
+            name="gradient", shape=shape,
+            build=bake(wami_gradient.gradient, gray),
+            vmem_bytes=wami_gradient.vmem_bytes,
+            grid_steps=wami_gradient.grid_steps, n_in=4, n_out=2),
+        "steep_descent": PallasKernelSpec(
+            name="steep_descent", shape=shape,
+            build=bake(wami_steep.steepest_descent, gx, gy),
+            vmem_bytes=wami_steep.vmem_bytes,
+            grid_steps=wami_steep.grid_steps, n_in=2, n_out=6),
+        "hessian": PallasKernelSpec(
+            name="hessian", shape=shape,
+            build=bake(wami_steep.hessian, sd),
+            vmem_bytes=wami_steep.hessian_vmem_bytes,
+            grid_steps=wami_steep.grid_steps, n_in=6, n_out=1),
+        "warp": PallasKernelSpec(
+            name="warp", shape=shape,
+            build=bake(wami_warp.warp_affine, gray, p),
+            vmem_bytes=wami_warp.vmem_bytes,
+            grid_steps=wami_warp.grid_steps, n_in=6, n_out=1),
+        "change_det": PallasKernelSpec(
+            name="change_det", shape=shape,
+            build=bake(wami_change_det.change_detection, gray, mu, var, w),
+            vmem_bytes=wami_change_det.vmem_bytes,
+            grid_steps=wami_change_det.grid_steps, n_in=10, n_out=10),
+    }
+
+
+def wami_pallas_oracle(mode: str = "replay", *, tile: int = C.TILE,
+                       store: Optional[MeasurementStore] = None,
+                       store_path: Optional[str] = None,
+                       fallback: Optional[HLSTool] = None,
+                       interpret: bool = True,
+                       timer=None, **kwargs) -> PallasOracle:
+    """The measured WAMI oracle.  Default: deterministic replay from the
+    checked-in recording (CI-safe, no TPU)."""
+    if store is None and mode in ("record", "replay"):
+        path = store_path or default_measurement_path(tile)
+        if mode == "replay" or os.path.exists(path):
+            store = MeasurementStore.load(path)
+        else:
+            store = MeasurementStore(path, meta={"tile": tile,
+                                                 "interpret": interpret})
+    return PallasOracle(wami_pallas_components(tile), mode=mode,
+                        store=store,
+                        fallback=fallback or wami_hls_tool(),
+                        interpret=interpret, timer=timer, **kwargs)
+
+
+def wami_pallas_session(delta: float = 0.25, *, mode: str = "replay",
+                        tile: int = C.TILE, workers: int = 1,
+                        oracle: Optional[PallasOracle] = None,
+                        **kwargs) -> ExplorationSession:
+    """An :class:`ExplorationSession` over the WAMI TMG driven by the
+    measured backend — same phases, ledger semantics, and knob spaces as
+    :func:`~repro.apps.wami.pipeline.wami_session`."""
+    tool = oracle or wami_pallas_oracle(mode, tile=tile)
+    return ExplorationSession(wami_tmg(), tool, wami_knob_spaces(),
+                              delta=delta,
+                              fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
+                              workers=workers, **kwargs)

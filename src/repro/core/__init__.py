@@ -18,6 +18,10 @@ over a batched synthesis oracle:
   * :mod:`repro.core.autotune` / :mod:`repro.core.xlatool` — the TPU
     instantiation: XLA pricing/compiles as the synthesis oracle,
     sharding/remat as the memory knobs
+  * :mod:`repro.core.pallas_oracle` / :mod:`repro.core.calibrate` — the
+    measured backend: knob-parameterized Pallas kernels compiled + timed
+    per point with record/replay, and the fit of the analytical tool's
+    latency constants to those measurements (docs/backends.md)
 """
 
 from .characterize import CharacterizationResult, characterize_component, spans
@@ -31,7 +35,12 @@ from .memgen import MemGen, PLM, PLMSpec
 from .oracle import (CountingTool, InvocationRecord, InvocationRequest,
                      Oracle, OracleBatchMixin, OracleLedger,
                      PersistentOracleCache)
-from .pareto import (DesignPoint, check_delta_curve, pareto_front_max_min,
+from .calibrate import (CalibratedTool, CalibrationFit, calibrate_to_records,
+                        fit_latency_scales)
+from .pallas_oracle import (MeasurementStore, MissingMeasurementError,
+                            PallasKernelSpec, PallasOracle)
+from .pareto import (DesignPoint, check_delta_curve, dominates_max_min,
+                     dominates_min_min, pareto_front_max_min,
                      pareto_front_min_min, span)
 from .planning import (ComponentModel, PiecewiseLinearCost, PlanPoint, plan,
                        sweep, theta_bounds)
@@ -41,11 +50,15 @@ from .tmg import TMG, Place, Transition, feedback_pipeline_tmg, pipeline_tmg
 __all__ = [
     "TMG", "Place", "Transition", "pipeline_tmg", "feedback_pipeline_tmg",
     "DesignPoint", "pareto_front_min_min", "pareto_front_max_min", "span",
-    "check_delta_curve",
+    "check_delta_curve", "dominates_min_min", "dominates_max_min",
     "KnobSpace", "Region", "Synthesis", "CDFGFacts", "SynthesisTool",
     "powers_of_two",
     "Oracle", "OracleBatchMixin", "OracleLedger", "CountingTool",
     "InvocationRequest", "InvocationRecord", "PersistentOracleCache",
+    "PallasOracle", "PallasKernelSpec", "MeasurementStore",
+    "MissingMeasurementError",
+    "CalibratedTool", "CalibrationFit", "fit_latency_scales",
+    "calibrate_to_records",
     "ExplorationSession", "ProgressEvent",
     "ComponentSpec", "LoopNest", "HLSTool", "MemGen", "PLM", "PLMSpec",
     "CharacterizationResult", "characterize_component", "spans",

@@ -1,0 +1,103 @@
+"""Fit the analytical backend's constants to measured oracle points.
+
+COSMOS treats the synthesis tool as ground truth; analytical models like
+``HLSTool`` are stand-ins whose *absolute* numbers are uncalibrated (the
+paper's claims are about ratios — hlsim.py).  Once a measured backend
+(:class:`~repro.core.pallas_oracle.PallasOracle`) has priced real
+(component, knob) points, this module closes the loop: it fits one
+latency scale per component — the geometric mean of measured/analytical
+over the commonly-feasible points, i.e. the least-squares solution in
+log space — and wraps the analytical tool so both backends report
+Pareto fronts on a comparable latency axis.  Shapes are NOT refitted:
+if the analytical Amdahl profile is wrong within a region, the residual
+spread (``lam_spread``) reports it rather than hiding it.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .knobs import CDFGFacts, Synthesis, SynthesisTool
+from .oracle import InvocationRecord
+
+__all__ = ["CalibrationFit", "fit_latency_scales", "CalibratedTool",
+           "calibrate_to_records"]
+
+
+@dataclass(frozen=True)
+class CalibrationFit:
+    """Per-component latency scales + goodness-of-fit diagnostics."""
+
+    scales: Dict[str, float]            # lam_measured ~= scale * lam_model
+    points: Dict[str, int]              # fitted points per component
+    lam_spread: Dict[str, float]        # max/min residual ratio (1.0 = exact)
+
+    def scale(self, component: str) -> float:
+        return self.scales.get(component, 1.0)
+
+
+def fit_latency_scales(
+        model: SynthesisTool,
+        measured: Iterable[Tuple[str, int, int, float]]) -> CalibrationFit:
+    """``measured``: (component, ports, unrolls, lam_measured) points.
+
+    Infeasible model points and non-positive measurements are skipped;
+    a component with no usable overlap keeps scale 1.0 (reported with
+    points=0).
+    """
+    logs: Dict[str, List[float]] = {}
+    for comp, ports, unrolls, lam in measured:
+        if not (lam > 0.0) or not math.isfinite(lam):
+            continue
+        synth = model.synthesize(comp, unrolls=unrolls, ports=ports)
+        if not synth.feasible or synth.lam <= 0:
+            continue
+        logs.setdefault(comp, []).append(math.log(lam / synth.lam))
+    scales, points, spread = {}, {}, {}
+    for comp, ls in logs.items():
+        mean = sum(ls) / len(ls)
+        scales[comp] = math.exp(mean)
+        points[comp] = len(ls)
+        spread[comp] = math.exp(max(ls) - min(ls)) if len(ls) > 1 else 1.0
+    return CalibrationFit(scales=scales, points=points, lam_spread=spread)
+
+
+def calibrate_to_records(model: SynthesisTool,
+                         records: Sequence[InvocationRecord]
+                         ) -> CalibrationFit:
+    """Fit from an :class:`OracleLedger`'s records of a measured drive
+    (the feasible ones carry the measured lambda)."""
+    return fit_latency_scales(
+        model, ((r.component, r.ports, r.unrolls, r.lam)
+                for r in records if r.feasible))
+
+
+class CalibratedTool:
+    """An analytical SynthesisTool with per-component latency scales.
+
+    Areas are left untouched — the two backends price cost in different
+    units (mm^2 vs VMEM bytes) on purpose; only the latency axis, which
+    the TMG throughput composes, is brought onto the measured scale.
+    """
+
+    def __init__(self, model: SynthesisTool, fit: CalibrationFit):
+        self.model = model
+        self.fit = fit
+
+    def synthesize(self, component: str, *, unrolls: int, ports: int,
+                   max_states: Optional[int] = None) -> Synthesis:
+        s = self.model.synthesize(component, unrolls=unrolls, ports=ports,
+                                  max_states=max_states)
+        if not s.feasible:
+            return s
+        k = self.fit.scale(component)
+        return Synthesis(lam=s.lam * k, area=s.area, ports=s.ports,
+                         unrolls=s.unrolls,
+                         states_per_iter=s.states_per_iter,
+                         feasible=s.feasible,
+                         detail={**s.detail, "lam_scale": k})
+
+    def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts:
+        return self.model.cdfg_facts(component, synth)

@@ -1,0 +1,315 @@
+"""PallasOracle: a *measured* execution backend for the COSMOS loop.
+
+Everything the DSE engine has priced so far came from closed-form models
+(``HLSTool``'s scheduler, ``XLATool``'s roofline).  This module is the
+backend the paper actually assumes exists: an oracle whose numbers come
+from running the thing — each (component, knob) point compiles the
+component's knob-parameterized Pallas kernel and *times* it
+(docs/backends.md walks through the protocol):
+
+  * latency lambda — measured wall clock per kernel launch, divided by
+    ``ports``: the grid columns are parallel lane-banks (DESIGN.md §2),
+    so the per-bank effective latency is what the TMG composes;
+  * area alpha — the VMEM footprint: the double-buffered working set
+    summed over the ``ports`` banks, plus a fixed per-bank pipeline
+    overhead (the TPU shadow of Mnemosyne's bank-controller area);
+  * the lambda-constraint — a knob point is infeasible when the grid
+    does not divide (W % ports, H % unrolls) or the double-buffered
+    block no longer fits the VMEM budget, and, like every backend, when
+    ``max_states`` caps the Eq. (1) state estimate.
+
+Measurements are memoized per (component, ports, unrolls) — one physical
+point is timed exactly once per process, so a batched drive prices
+identically to a sequential one — and flow through a
+:class:`MeasurementStore` for record/replay: ``mode="record"`` times and
+persists, ``mode="replay"`` is fully deterministic and machine-free (CI
+has no TPU; the checked-in recording under ``artifacts/measurements/``
+drives the same fronts byte-for-byte).  Components without a Pallas
+kernel fall back to a wrapped analytical tool, so a mixed system (the
+full WAMI TMG) still explores end-to-end.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from .knobs import CDFGFacts, Synthesis, SynthesisTool
+from .oracle import OracleBatchMixin
+
+__all__ = [
+    "PallasKernelSpec",
+    "MeasurementStore",
+    "MissingMeasurementError",
+    "PallasOracle",
+]
+
+# one physical measurement: (component, ports, unrolls).  ``max_states``
+# is NOT part of the key — feasibility under a cap is decided from the
+# deterministic state model, never re-measured.
+MeasureKey = Tuple[str, int, int]
+
+_VMEM_BUDGET = 16 * 1024 * 1024     # bytes per TPU core
+
+
+@dataclass(frozen=True)
+class PallasKernelSpec:
+    """One knob-parameterized kernel, as the oracle sees it.
+
+    ``build(ports, unrolls, interpret)`` returns a zero-argument runner
+    (inputs baked in, deterministic) whose launch the oracle times.
+    ``vmem_bytes``/``grid_steps`` are the kernel package's cost models
+    (``(H, W, ports=, unrolls=) -> int``).  ``n_in``/``n_out`` are the
+    VMEM blocks the kernel streams per grid step — the Eq. (1)
+    gamma_r/gamma_w analogues used for the state estimate.
+    """
+
+    name: str
+    shape: Tuple[int, int]                      # (H, W) the stage processes
+    build: Callable[[int, int, bool], Callable[[], Any]]
+    vmem_bytes: Callable[..., int]
+    grid_steps: Callable[..., int]
+    n_in: int
+    n_out: int
+
+    def divisible(self, ports: int, unrolls: int) -> bool:
+        H, W = self.shape
+        return W % ports == 0 and H % unrolls == 0
+
+    def facts(self) -> CDFGFacts:
+        return CDFGFacts(gamma_r=self.n_in, gamma_w=self.n_out, eta=1,
+                         trip=self.shape[0], has_plm_access=True)
+
+    def states(self, ports: int, unrolls: int) -> int:
+        return self.facts().h(unrolls, ports)
+
+
+class MissingMeasurementError(KeyError):
+    """Replay asked for a point the recording does not contain."""
+
+
+class MeasurementStore:
+    """A flat, deterministic JSON store of raw kernel timings.
+
+    Maps (component, ports, unrolls) -> measured wall seconds per
+    launch.  The derived quantities (per-bank lambda, VMEM area,
+    feasibility) are recomputed by the oracle on replay, so a recording
+    survives cost-model refinements.  ``save`` writes sorted keys —
+    re-recording an identical machine state diffs clean.
+    """
+
+    def __init__(self, path: Optional[str] = None,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.path = path
+        self.meta: Dict[str, Any] = dict(meta or {})
+        self.entries: Dict[MeasureKey, float] = {}
+
+    @classmethod
+    def load(cls, path: str) -> "MeasurementStore":
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("version") != 1:
+            raise ValueError(f"unknown measurement-store version "
+                             f"{doc.get('version')!r} in {path}")
+        store = cls(path=path, meta=doc.get("meta", {}))
+        for k, wall_s in doc["entries"].items():
+            comp, p, u = k.rsplit(":", 2)
+            store.entries[(comp, int(p[1:]), int(u[1:]))] = float(wall_s)
+        return store
+
+    @staticmethod
+    def _key_str(key: MeasureKey) -> str:
+        comp, ports, unrolls = key
+        return f"{comp}:p{ports}:u{unrolls}"
+
+    def get(self, key: MeasureKey) -> Optional[float]:
+        return self.entries.get(key)
+
+    def put(self, key: MeasureKey, wall_s: float) -> None:
+        self.entries[key] = float(wall_s)
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if path is None:
+            raise ValueError("MeasurementStore has no path")
+        doc = {"version": 1, "meta": self.meta,
+               "entries": {self._key_str(k): self.entries[k]
+                           for k in sorted(self.entries)}}
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+        self.path = path
+        return path
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+class PallasOracle(OracleBatchMixin):
+    """The measured synthesis oracle (SynthesisTool/Oracle protocols).
+
+    ``mode``:
+      * ``"measure"`` — compile + time every new point (memoized);
+      * ``"record"``  — measure, and persist every timing into ``store``;
+      * ``"replay"``  — never execute; raise
+        :class:`MissingMeasurementError` on a point absent from
+        ``store`` (re-record with ``examples/wami_pallas.py --record``).
+
+    ``fallback`` prices components that have no Pallas kernel (e.g. the
+    6x6 matrix stages of WAMI) through an analytical tool, so a mixed
+    TMG explores end-to-end.  ``timer(component, ports, unrolls, runner)
+    -> seconds`` replaces the wall-clock measurement — tests inject a
+    deterministic one to make a *fresh* drive byte-comparable to a
+    replayed one.
+    """
+
+    def __init__(self, components: Dict[str, PallasKernelSpec], *,
+                 mode: str = "measure",
+                 store: Optional[MeasurementStore] = None,
+                 fallback: Optional[SynthesisTool] = None,
+                 interpret: bool = True,
+                 vmem_budget: int = _VMEM_BUDGET,
+                 bank_overhead_bytes: int = 4096,
+                 reps: int = 3,
+                 timer: Optional[Callable[..., float]] = None):
+        if mode not in ("measure", "record", "replay"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode in ("record", "replay") and store is None:
+            raise ValueError(f"mode={mode!r} requires a MeasurementStore")
+        self.components = dict(components)
+        self.mode = mode
+        self.store = store
+        self.fallback = fallback
+        self.interpret = interpret
+        self.vmem_budget = int(vmem_budget)
+        self.bank_overhead_bytes = int(bank_overhead_bytes)
+        self.reps = max(1, int(reps))
+        self.timer = timer
+        self._measured: Dict[MeasureKey, float] = {}
+        self._lock = threading.Lock()
+        # timing under a thread-pool fan-out measures contention, not the
+        # kernel: _measure_lock serializes every real measurement even
+        # when a ledger/session fans synthesize() out over its own pool;
+        # replay never executes and can fan out freely
+        self._measure_lock = threading.Lock()
+        self.batch_workers = 8 if mode == "replay" else 1
+
+    # ------------------------------------------------------------------
+    # measurement
+    # ------------------------------------------------------------------
+    def _time_runner(self, runner: Callable[[], Any]) -> float:
+        import jax
+        jax.block_until_ready(runner())            # compile + warm up
+        best = float("inf")
+        for _ in range(self.reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(runner())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def _wall_s(self, spec: PallasKernelSpec, ports: int,
+                unrolls: int) -> float:
+        key: MeasureKey = (spec.name, ports, unrolls)
+        with self._lock:
+            hit = self._measured.get(key)
+        if hit is not None:
+            return hit
+        if self.mode == "replay":
+            wall = self.store.get(key)
+            if wall is None:
+                raise MissingMeasurementError(
+                    f"no recorded measurement for {key}; re-record with "
+                    f"`python examples/wami_pallas.py --record`")
+        else:
+            with self._measure_lock:
+                with self._lock:              # raced while waiting?
+                    hit = self._measured.get(key)
+                if hit is not None:
+                    return hit
+                if self.timer is not None:
+                    wall = float(self.timer(spec.name, ports, unrolls,
+                                            spec.build(ports, unrolls,
+                                                       self.interpret)))
+                else:
+                    wall = self._time_runner(spec.build(ports, unrolls,
+                                                        self.interpret))
+        with self._lock:
+            # a racing measurement of the same key keeps the first value,
+            # so every consumer sees one number per physical point
+            wall = self._measured.setdefault(key, wall)
+            if self.mode == "record":
+                self.store.put(key, wall)
+        return wall
+
+    # ------------------------------------------------------------------
+    # cost composition
+    # ------------------------------------------------------------------
+    def _area_bytes(self, spec: PallasKernelSpec, ports: int,
+                    unrolls: int) -> float:
+        H, W = spec.shape
+        step = spec.vmem_bytes(H, W, ports=ports, unrolls=unrolls)
+        # double-buffered working set in every parallel bank + fixed
+        # per-bank pipeline overhead (descriptors, semaphores)
+        return float(2 * step * ports + self.bank_overhead_bytes * ports)
+
+    def _infeasible(self, ports: int, unrolls: int, states: int) -> Synthesis:
+        return Synthesis(lam=float("inf"), area=float("inf"), ports=ports,
+                         unrolls=unrolls, states_per_iter=states,
+                         feasible=False)
+
+    # ------------------------------------------------------------------
+    # SynthesisTool protocol
+    # ------------------------------------------------------------------
+    def synthesize(self, component: str, *, unrolls: int, ports: int,
+                   max_states: Optional[int] = None) -> Synthesis:
+        spec = self.components.get(component)
+        if spec is None:
+            if self.fallback is None:
+                raise KeyError(f"no Pallas kernel or fallback tool for "
+                               f"component {component!r}")
+            return self.fallback.synthesize(component, unrolls=unrolls,
+                                            ports=ports,
+                                            max_states=max_states)
+        if not spec.divisible(ports, unrolls):
+            return self._infeasible(ports, unrolls, 0)
+        states = spec.states(ports, unrolls)
+        if max_states is not None and states > max_states:
+            return self._infeasible(ports, unrolls, states)
+        H, W = spec.shape
+        step = spec.vmem_bytes(H, W, ports=ports, unrolls=unrolls)
+        if 2 * step > self.vmem_budget:
+            # the TPU lambda-constraint: the double-buffered block no
+            # longer fits VMEM — discarded, and counted, like any other
+            # failed synthesis
+            return self._infeasible(ports, unrolls, states)
+        wall = self._wall_s(spec, ports, unrolls)
+        lam = wall / ports                       # parallel lane-banks
+        area = self._area_bytes(spec, ports, unrolls)
+        return Synthesis(
+            lam=lam, area=area, ports=ports, unrolls=unrolls,
+            states_per_iter=states, feasible=True,
+            detail={"wall_s": wall, "vmem_step_bytes": float(step),
+                    "grid_steps": float(spec.grid_steps(
+                        H, W, ports=ports, unrolls=unrolls))})
+
+    def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts:
+        spec = self.components.get(component)
+        if spec is None:
+            if self.fallback is None:
+                raise KeyError(component)
+            return self.fallback.cdfg_facts(component, synth)
+        return spec.facts()
+
+    # ------------------------------------------------------------------
+    def flush(self) -> Optional[str]:
+        """Persist the store (record mode); no-op otherwise."""
+        if self.mode == "record" and self.store is not None:
+            return self.store.save()
+        return None

@@ -1,12 +1,20 @@
 """Pareto utilities: dominance, fronts, spans, and delta-granularity curves.
 
-Conventions follow the paper:
-  * a design point is (performance, cost); for components performance is
-    the effective latency lambda (lower is better) and cost is the area
-    alpha (lower is better);
-  * for systems, performance is the effective throughput theta (HIGHER is
-    better) and cost is alpha (lower is better);
-  * span = max/min over a point set for one metric (Section 1.3).
+Two dominance conventions coexist in the paper, and every function here
+is explicitly suffixed with the one it uses — mixing them silently
+inverts a front:
+
+  * **min-min** (components): performance is the effective latency
+    lambda and cost is the area alpha, both minimized.  Algorithm 1
+    regions, per-component fronts, and the exhaustive per-component
+    sweep (``exhaustive_dse``) live here.
+  * **max-min** (systems): performance is the effective throughput
+    theta, MAXIMIZED, while cost alpha is still minimized.  Fig. 10's
+    system curve, ``CosmosResult.pareto()``, and the delta-granularity
+    condition of Problem 1 live here.
+
+``span`` (max/min ratio over one metric, Section 1.3 / Table 1) is
+convention-free; ``check_delta_curve`` is max-min by definition.
 """
 
 from __future__ import annotations
@@ -15,13 +23,17 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 __all__ = [
+    # the point type
     "DesignPoint",
+    # min-min convention (components: lambda down, alpha down)
     "dominates_min_min",
-    "dominates_max_min",
     "pareto_front_min_min",
+    # max-min convention (systems: theta up, alpha down)
+    "dominates_max_min",
     "pareto_front_max_min",
-    "span",
     "check_delta_curve",
+    # convention-free diagnostics
+    "span",
 ]
 
 
@@ -45,12 +57,17 @@ class DesignPoint:
 
 
 def dominates_min_min(a: DesignPoint, b: DesignPoint) -> bool:
-    """a dominates b when both metrics are to be minimized (lambda, alpha)."""
+    """a dominates b under the COMPONENT convention: both metrics
+    minimized (perf = latency lambda, cost = area alpha).  Dominance is
+    strict — no-worse on both axes AND strictly better on at least one,
+    so duplicated points never dominate each other."""
     return (a.perf <= b.perf and a.cost <= b.cost) and (a.perf < b.perf or a.cost < b.cost)
 
 
 def dominates_max_min(a: DesignPoint, b: DesignPoint) -> bool:
-    """a dominates b when perf=theta is maximized and cost minimized."""
+    """a dominates b under the SYSTEM convention: perf = throughput
+    theta MAXIMIZED, cost = area alpha minimized.  Strict in the same
+    sense as :func:`dominates_min_min`."""
     return (a.perf >= b.perf and a.cost <= b.cost) and (a.perf > b.perf or a.cost < b.cost)
 
 
@@ -71,17 +88,29 @@ def _front(points: Sequence[DesignPoint], dom) -> List[DesignPoint]:
 
 
 def pareto_front_min_min(points: Sequence[DesignPoint]) -> List[DesignPoint]:
-    """Pareto-optimal subset, both metrics minimized, sorted by perf."""
+    """Pareto-optimal subset under the component (min-min) convention,
+    deduplicated on (perf, cost) and sorted by ascending latency — the
+    left-to-right order of a Fig. 4 component curve."""
     return sorted(_front(points, dominates_min_min), key=lambda p: (p.perf, p.cost))
 
 
 def pareto_front_max_min(points: Sequence[DesignPoint]) -> List[DesignPoint]:
-    """Pareto-optimal subset for (throughput up, cost down), sorted by perf."""
+    """Pareto-optimal subset under the system (max-min) convention,
+    deduplicated on (perf, cost) and sorted by ascending throughput —
+    the left-to-right order of the Fig. 10 system curve (costs ascend
+    with it, or the point would be dominated)."""
     return sorted(_front(points, dominates_max_min), key=lambda p: (p.perf, p.cost))
 
 
 def span(values: Iterable[float]) -> float:
-    """max/min ratio (the paper's lambda_span / alpha_span, Table 1)."""
+    """max/min ratio over one metric (the paper's lambda_span /
+    alpha_span, Section 1.3 / Table 1).
+
+    Returns 1.0 for an empty set (a degenerate single-point space) and
+    +inf when the minimum is non-positive — an infeasible latency/area
+    should never reach here, so the inf flags the upstream bug instead
+    of masking it.
+    """
     vals = [v for v in values]
     if not vals:
         return 1.0
@@ -92,8 +121,14 @@ def span(values: Iterable[float]) -> float:
 
 
 def check_delta_curve(points: Sequence[DesignPoint], delta: float) -> bool:
-    """Problem 1 condition (i): consecutive Pareto points d, d' must satisfy
-    max(d'_alpha/d_alpha - 1, d'_theta/d_theta - 1) < delta."""
+    """Problem 1 condition (i), on the max-min (system) front of
+    ``points``: consecutive Pareto points d, d' (ascending theta) must
+    satisfy max(d'_alpha/d_alpha - 1, d'_theta/d_theta - 1) < delta.
+
+    Returns False for fronts containing non-positive coordinates (the
+    ratios would be meaningless).  The tolerance term absorbs float
+    error at the boundary gap == delta, which counts as satisfied.
+    """
     front = pareto_front_max_min(points)
     for d, d2 in zip(front, front[1:]):
         if d.perf <= 0 or d.cost <= 0:

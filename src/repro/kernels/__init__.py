@@ -4,4 +4,10 @@ Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
 <name>/ops.py (jitted wrapper with an XLA fallback) and <name>/ref.py
 (pure-jnp oracle).  Validated with interpret=True on CPU; the dry-run
 lowers the XLA path (DESIGN.md Section 6).
+
+The wami_* kernels additionally expose the COSMOS knob pair (``ports``
+-> lane-bank grid columns, ``unrolls`` -> rows per grid step; shared
+plumbing in ``wami_common.py``) plus ``vmem_bytes``/``grid_steps`` cost
+models — they are the measurable substrate of the ``PallasOracle``
+backend (DESIGN.md Section 2, docs/backends.md).
 """

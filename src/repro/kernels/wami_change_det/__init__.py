@@ -1,0 +1,5 @@
+from .ops import (change_detection, change_detection_oracle, grid_steps,
+                  vmem_bytes)
+
+__all__ = ["change_detection", "change_detection_oracle",
+           "vmem_bytes", "grid_steps"]

@@ -1,0 +1,103 @@
+"""WAMI change detection (per-pixel GMM, K=3) as a Pallas kernel.
+
+The heaviest WAMI stage: every pixel carries a K=3 Gaussian-mixture
+background state (mu, var, w) that is matched, updated, and renormalized
+each frame.  Knob geometry per DESIGN.md §2 (``ports`` lane-banks x
+``unrolls`` rows per grid step); the mixture state rides along as
+(K, H, W) planes whose BlockSpec blocks the pixel axes and keeps the
+K axis whole, so each grid step owns the full mixture for its tile.
+
+The argmin/one-hot over K is unrolled by hand (K=3): first-index
+tie-breaking matches ``jnp.argmin`` exactly, and the unrolled compares
+stay elementwise on the VPU instead of forcing a cross-lane reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..wami_common import (grid_steps_model, knob_blocks, parallel_params,
+                           tile_spec, vmem_bytes_model)
+
+__all__ = ["change_detection_kernel", "vmem_bytes", "grid_steps"]
+
+_K = 3
+# gray + 3 state planes of K=3 in; mask + 3 state planes of K=3 out
+_N_IN, _N_OUT = 1 + 3 * _K, 1 + 3 * _K
+
+
+def _first_min_onehot(v0, v1, v2):
+    """One-hot of argmin over three planes, first index wins ties."""
+    b0 = (v0 <= v1) & (v0 <= v2)
+    b1 = (~b0) & (v1 <= v2)
+    b2 = ~(b0 | b1)
+    return b0, b1, b2
+
+
+def _kernel(g_ref, mu_ref, var_ref, w_ref,
+            mask_ref, mu_o, var_o, w_o, *, lr, mahal, fg):
+    x = g_ref[...][None]                               # (1, bh, bw)
+    mu, var, w = mu_ref[...], var_ref[...], w_ref[...]  # (K, bh, bw)
+    d2 = (x - mu) ** 2 / jnp.maximum(var, 1e-4)
+    match = d2 < mahal
+    any_match = match[0] | match[1] | match[2]
+    inf = jnp.inf
+    dm = jnp.where(match, d2, inf)
+    b0, b1, b2 = _first_min_onehot(dm[0], dm[1], dm[2])
+    onehot = (jnp.stack([b0, b1, b2]) & any_match[None]).astype(mu.dtype)
+
+    mu_n = mu + onehot * lr * (x - mu)
+    var_n = var + onehot * lr * ((x - mu) ** 2 - var)
+    w_n = (1 - lr) * w + lr * onehot
+    # no match: replace the weakest component with a fresh one at x
+    k0, k1, k2 = _first_min_onehot(w[0], w[1], w[2])
+    wh = (jnp.stack([k0, k1, k2]) & (~any_match)[None]).astype(mu.dtype)
+    mu_n = mu_n * (1 - wh) + wh * x
+    var_n = var_n * (1 - wh) + wh * 25.0
+    w_n = w_n * (1 - wh) + wh * lr
+    w_n = w_n / (w_n[0] + w_n[1] + w_n[2])[None]
+    # foreground: matched component is low-weight, or no match at all
+    matched_w = (onehot * w).sum(axis=0)
+    mask = (~any_match) | (matched_w < (1.0 - fg))
+    mask_ref[...] = mask.astype(mu.dtype)
+    mu_o[...] = mu_n
+    var_o[...] = var_n
+    w_o[...] = w_n
+
+
+def change_detection_kernel(gray: jnp.ndarray, mu: jnp.ndarray,
+                            var: jnp.ndarray, w: jnp.ndarray, *,
+                            ports: int = 1, unrolls: int = 8,
+                            lr: float = 0.05, mahal_thresh: float = 6.25,
+                            fg_thresh: float = 0.7,
+                            interpret: bool = False):
+    """gray: (H, W); mu/var/w: (H, W, K=3) mixture state.
+
+    Returns (mask (H, W) in {0.0, 1.0}, mu', var', w') with state in the
+    (H, W, K) layout of the reference.
+    """
+    H, W = gray.shape
+    bh, bw = knob_blocks(H, W, ports=ports, unrolls=unrolls)
+    spec = tile_spec(bh, bw)
+    spec_k = pl.BlockSpec((_K, bh, bw), lambda i, j: (0, i, j))
+    planes = lambda a: jnp.moveaxis(a, -1, 0)          # (H,W,K) -> (K,H,W)
+    mask, mu_n, var_n, w_n = pl.pallas_call(
+        functools.partial(_kernel, lr=lr, mahal=mahal_thresh, fg=fg_thresh),
+        grid=(H // bh, ports),
+        in_specs=[spec, spec_k, spec_k, spec_k],
+        out_specs=[spec, spec_k, spec_k, spec_k],
+        out_shape=[jax.ShapeDtypeStruct((H, W), gray.dtype)]
+        + [jax.ShapeDtypeStruct((_K, H, W), gray.dtype)] * 3,
+        compiler_params=parallel_params(),
+        interpret=interpret,
+    )(gray, planes(mu), planes(var), planes(w))
+    back = lambda a: jnp.moveaxis(a, 0, -1)
+    return mask, back(mu_n), back(var_n), back(w_n)
+
+
+vmem_bytes = functools.partial(vmem_bytes_model, n_in=_N_IN, n_out=_N_OUT)
+grid_steps = grid_steps_model

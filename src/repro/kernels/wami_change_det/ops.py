@@ -1,0 +1,29 @@
+"""Jitted wrapper for the WAMI change-detection kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import change_detection_kernel, grid_steps, vmem_bytes
+from .ref import change_detection_ref
+
+__all__ = ["change_detection", "change_detection_oracle",
+           "vmem_bytes", "grid_steps"]
+
+
+@functools.partial(jax.jit, static_argnames=("ports", "unrolls",
+                                             "use_pallas", "interpret"))
+def change_detection(gray, mu, var, w, *, ports=1, unrolls=8,
+                     use_pallas=True, interpret=False):
+    if use_pallas:
+        mask, mu_n, var_n, w_n = change_detection_kernel(
+            gray, mu, var, w, ports=ports, unrolls=unrolls,
+            interpret=interpret)
+        return mask.astype(bool), mu_n, var_n, w_n
+    return change_detection_ref(gray, mu, var, w)
+
+
+def change_detection_oracle(gray, mu, var, w):
+    return change_detection_ref(gray, mu, var, w)

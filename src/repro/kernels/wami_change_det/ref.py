@@ -1,0 +1,35 @@
+"""Oracle: per-pixel GMM background subtraction (same math as
+apps.wami.components.change_detection)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["change_detection_ref"]
+
+_K = 3
+
+
+def change_detection_ref(gray, mu, var, w, *, lr=0.05, mahal_thresh=6.25,
+                         fg_thresh=0.7):
+    x = gray[..., None]
+    d2 = (x - mu) ** 2 / jnp.maximum(var, 1e-4)
+    match = d2 < mahal_thresh
+    any_match = jnp.any(match, axis=-1)
+    d2_masked = jnp.where(match, d2, jnp.inf)
+    best = jnp.argmin(d2_masked, axis=-1)
+    onehot = jax.nn.one_hot(best, _K, dtype=gray.dtype) * any_match[..., None]
+
+    mu_n = mu + onehot * lr * (x - mu)
+    var_n = var + onehot * lr * ((x - mu) ** 2 - var)
+    w_n = (1 - lr) * w + lr * onehot
+    weakest = jnp.argmin(w, axis=-1)
+    wh = jax.nn.one_hot(weakest, _K, dtype=gray.dtype) * (~any_match)[..., None]
+    mu_n = mu_n * (1 - wh) + wh * x
+    var_n = var_n * (1 - wh) + wh * 25.0
+    w_n = w_n * (1 - wh) + wh * lr
+    w_n = w_n / jnp.sum(w_n, axis=-1, keepdims=True)
+    matched_w = jnp.sum(onehot * w, axis=-1)
+    mask = (~any_match) | (matched_w < (1.0 - fg_thresh))
+    return mask, mu_n, var_n, w_n

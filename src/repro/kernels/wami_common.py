@@ -1,0 +1,71 @@
+"""Shared plumbing for the COSMOS-knob WAMI kernels (DESIGN.md §2).
+
+Every WAMI stage kernel maps the paper's two knobs onto the same
+BlockSpec/grid geometry, established by ``wami_gradient``:
+
+  * ``ports``   -> number of column banks: the W axis splits into
+    ``ports`` lane-blocks processed by parallel grid columns (the
+    multi-bank PLM Mnemosyne would generate, as VMEM tiles);
+  * ``unrolls`` -> rows computed per grid step (``block_h``): loop-body
+    replication, trading VMEM footprint for fewer grid iterations.
+
+This module holds the helpers those kernels share: the jax<0.5 compat
+shim for ``pltpu.CompilerParams``, the knob -> (grid, BlockSpec)
+translation, and the VMEM/grid cost models parameterized by the number
+of input/output blocks a kernel touches per grid step.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+if not hasattr(pltpu, "CompilerParams"):   # jax < 0.5: old class name
+    pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["pltpu", "knob_blocks", "tile_spec", "parallel_params",
+           "arbitrary_params", "vmem_bytes_model", "grid_steps_model"]
+
+
+def knob_blocks(H: int, W: int, *, ports: int, unrolls: int
+                ) -> Tuple[int, int]:
+    """(block_h, block_w) for a knob pair; asserts the divisibility the
+    real grid requires (the PallasOracle reports non-divisible knob
+    points as infeasible instead of asserting)."""
+    assert W % ports == 0, f"W={W} not divisible by ports={ports}"
+    assert H % unrolls == 0, f"H={H} not divisible by unrolls={unrolls}"
+    return unrolls, W // ports
+
+
+def tile_spec(bh: int, bw: int) -> pl.BlockSpec:
+    """The canonical (rows, lane-bank) block: grid cell (i, j) covers
+    rows [i*bh, (i+1)*bh) of bank j."""
+    return pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+
+
+def parallel_params() -> "pltpu.CompilerParams":
+    """Both grid axes independent (elementwise/stencil stages)."""
+    return pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel"))
+
+
+def arbitrary_params() -> "pltpu.CompilerParams":
+    """Sequential grid walk — required when the kernel accumulates into
+    an output block shared across grid steps (reductions)."""
+    return pltpu.CompilerParams(
+        dimension_semantics=("arbitrary", "arbitrary"))
+
+
+def vmem_bytes_model(H: int, W: int, *, ports: int, unrolls: int,
+                     n_in: int, n_out: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set per grid step: ``n_in`` input + ``n_out`` output
+    blocks of (unrolls, W/ports) words each."""
+    return (n_in + n_out) * unrolls * (W // ports) * dtype_bytes
+
+
+def grid_steps_model(H: int, W: int, *, ports: int, unrolls: int) -> int:
+    """Sequential steps if one core walks the grid (latency model input)."""
+    return (H // unrolls) * ports

@@ -1,0 +1,3 @@
+from .ops import debayer, debayer_oracle, grid_steps, vmem_bytes
+
+__all__ = ["debayer", "debayer_oracle", "vmem_bytes", "grid_steps"]

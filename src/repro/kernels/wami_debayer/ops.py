@@ -1,0 +1,25 @@
+"""Jitted wrapper for the WAMI debayer kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import debayer_kernel, grid_steps, vmem_bytes
+from .ref import debayer_ref
+
+__all__ = ["debayer", "debayer_oracle", "vmem_bytes", "grid_steps"]
+
+
+@functools.partial(jax.jit, static_argnames=("ports", "unrolls",
+                                             "use_pallas", "interpret"))
+def debayer(bayer, *, ports=1, unrolls=8, use_pallas=True, interpret=False):
+    if use_pallas:
+        return debayer_kernel(bayer, ports=ports, unrolls=unrolls,
+                              interpret=interpret)
+    return debayer_ref(bayer)
+
+
+def debayer_oracle(bayer):
+    return debayer_ref(bayer)

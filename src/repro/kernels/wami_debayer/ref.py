@@ -1,0 +1,35 @@
+"""Oracle: bilinear RGGB demosaic (same math as apps.wami.components)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["debayer_ref"]
+
+
+def debayer_ref(bayer: jnp.ndarray) -> jnp.ndarray:
+    img = bayer.astype(jnp.float32)
+    H, W = img.shape
+    p = jnp.pad(img, 1, mode="reflect")
+    c = p[1:-1, 1:-1]
+    n, s = p[:-2, 1:-1], p[2:, 1:-1]
+    w, e = p[1:-1, :-2], p[1:-1, 2:]
+    nw, ne = p[:-2, :-2], p[:-2, 2:]
+    sw, se = p[2:, :-2], p[2:, 2:]
+    cross = (n + s + w + e) * 0.25
+    diag = (nw + ne + sw + se) * 0.25
+    horiz = (w + e) * 0.5
+    vert = (n + s) * 0.5
+
+    yy, xx = jnp.meshgrid(jnp.arange(H), jnp.arange(W), indexing="ij")
+    r_loc = (yy % 2 == 0) & (xx % 2 == 0)
+    g1_loc = (yy % 2 == 0) & (xx % 2 == 1)
+    g2_loc = (yy % 2 == 1) & (xx % 2 == 0)
+    b_loc = (yy % 2 == 1) & (xx % 2 == 1)
+
+    r = jnp.where(r_loc, c, jnp.where(g1_loc, horiz,
+                                      jnp.where(g2_loc, vert, diag)))
+    g = jnp.where(r_loc | b_loc, cross, c)
+    b = jnp.where(b_loc, c, jnp.where(g2_loc, horiz,
+                                      jnp.where(g1_loc, vert, diag)))
+    return jnp.stack([r, g, b], axis=-1)

@@ -1,0 +1,3 @@
+from .ops import grayscale, grayscale_oracle, grid_steps, vmem_bytes
+
+__all__ = ["grayscale", "grayscale_oracle", "vmem_bytes", "grid_steps"]

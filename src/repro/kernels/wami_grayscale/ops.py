@@ -1,0 +1,25 @@
+"""Jitted wrapper for the WAMI grayscale kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import grayscale_kernel, grid_steps, vmem_bytes
+from .ref import grayscale_ref
+
+__all__ = ["grayscale", "grayscale_oracle", "vmem_bytes", "grid_steps"]
+
+
+@functools.partial(jax.jit, static_argnames=("ports", "unrolls",
+                                             "use_pallas", "interpret"))
+def grayscale(rgb, *, ports=1, unrolls=8, use_pallas=True, interpret=False):
+    if use_pallas:
+        return grayscale_kernel(rgb, ports=ports, unrolls=unrolls,
+                                interpret=interpret)
+    return grayscale_ref(rgb)
+
+
+def grayscale_oracle(rgb):
+    return grayscale_ref(rgb)

@@ -1,0 +1,12 @@
+"""Oracle: BT.601 luma (same math as apps.wami.components.grayscale)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["grayscale_ref"]
+
+
+def grayscale_ref(rgb: jnp.ndarray) -> jnp.ndarray:
+    return (0.299 * rgb[..., 0] + 0.587 * rgb[..., 1]
+            + 0.114 * rgb[..., 2])

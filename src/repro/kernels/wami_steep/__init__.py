@@ -1,0 +1,6 @@
+from .ops import (grid_steps, hessian, hessian_oracle, hessian_vmem_bytes,
+                  steepest_descent, steepest_descent_oracle, vmem_bytes)
+
+__all__ = ["steepest_descent", "steepest_descent_oracle",
+           "hessian", "hessian_oracle",
+           "vmem_bytes", "grid_steps", "hessian_vmem_bytes"]

@@ -1,0 +1,105 @@
+"""WAMI steepest-descent images + Gauss-Newton Hessian as Pallas kernels.
+
+Two stages of the inverse-compositional Lucas-Kanade template side,
+sharing the COSMOS knob geometry of DESIGN.md §2 (``ports`` column
+lane-banks x ``unrolls`` rows per grid step):
+
+  * ``steepest_descent_kernel`` — elementwise with global coordinates:
+    sd = (gx*x, gx*y, gx, gy*x, gy*y, gy).  The affine-warp Jacobian
+    coordinates are rebuilt in-kernel from ``program_id`` block offsets
+    + iota, so no coordinate planes are streamed from HBM;
+  * ``hessian_kernel`` — the reduction H = sum_x sd(x)^T sd(x): each
+    grid step contracts its (6, bh*bw) block on the MXU and accumulates
+    into a single (6, 6) output block shared by every step, which forces
+    an ``arbitrary`` (sequential) grid walk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..wami_common import (arbitrary_params, grid_steps_model, knob_blocks,
+                           parallel_params, tile_spec, vmem_bytes_model)
+
+__all__ = ["steepest_descent_kernel", "hessian_kernel",
+           "vmem_bytes", "grid_steps", "hessian_vmem_bytes"]
+
+_N_IN, _N_OUT = 2, 6      # steepest descent: gx, gy -> 6 sd planes
+
+
+def _sd_kernel(gx_ref, gy_ref, s0, s1, s2, s3, s4, s5):
+    bh, bw = gx_ref.shape
+    gx, gy = gx_ref[...], gy_ref[...]
+    yy = (jax.lax.broadcasted_iota(jnp.int32, (bh, bw), 0)
+          + pl.program_id(0) * bh).astype(gx.dtype)
+    xx = (jax.lax.broadcasted_iota(jnp.int32, (bh, bw), 1)
+          + pl.program_id(1) * bw).astype(gx.dtype)
+    s0[...] = gx * xx
+    s1[...] = gx * yy
+    s2[...] = gx
+    s3[...] = gy * xx
+    s4[...] = gy * yy
+    s5[...] = gy
+
+
+def steepest_descent_kernel(gx: jnp.ndarray, gy: jnp.ndarray, *,
+                            ports: int = 1, unrolls: int = 8,
+                            interpret: bool = False) -> jnp.ndarray:
+    """gx, gy: (H, W) image gradients -> sd images (H, W, 6)."""
+    H, W = gx.shape
+    bh, bw = knob_blocks(H, W, ports=ports, unrolls=unrolls)
+    spec = tile_spec(bh, bw)
+    planes = pl.pallas_call(
+        _sd_kernel,
+        grid=(H // bh, ports),
+        in_specs=[spec] * 2,
+        out_specs=[spec] * 6,
+        out_shape=[jax.ShapeDtypeStruct((H, W), gx.dtype)] * 6,
+        compiler_params=parallel_params(),
+        interpret=interpret,
+    )(gx, gy)
+    return jnp.stack(planes, axis=-1)
+
+
+def _hessian_kernel(s0, s1, s2, s3, s4, s5, out_ref):
+    first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    flat = jnp.stack([s[...].reshape(-1)
+                      for s in (s0, s1, s2, s3, s4, s5)])       # (6, bh*bw)
+    out_ref[...] += jnp.dot(flat, flat.T,
+                            preferred_element_type=out_ref.dtype)
+
+
+def hessian_kernel(sd: jnp.ndarray, *, ports: int = 1, unrolls: int = 8,
+                   interpret: bool = False) -> jnp.ndarray:
+    """sd: (H, W, 6) steepest-descent images -> Hessian (6, 6)."""
+    H, W, _ = sd.shape
+    bh, bw = knob_blocks(H, W, ports=ports, unrolls=unrolls)
+    spec = tile_spec(bh, bw)
+    return pl.pallas_call(
+        _hessian_kernel,
+        grid=(H // bh, ports),
+        in_specs=[spec] * 6,
+        out_specs=pl.BlockSpec((6, 6), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((6, 6), sd.dtype),
+        compiler_params=arbitrary_params(),
+        interpret=interpret,
+    )(*(sd[..., k] for k in range(6)))
+
+
+vmem_bytes = functools.partial(vmem_bytes_model, n_in=_N_IN, n_out=_N_OUT)
+grid_steps = grid_steps_model
+
+
+def hessian_vmem_bytes(H: int, W: int, *, ports: int, unrolls: int,
+                       dtype_bytes: int = 4) -> int:
+    """Six sd input blocks + the resident (6, 6) accumulator."""
+    return (6 * unrolls * (W // ports) + 36) * dtype_bytes

@@ -1,0 +1,42 @@
+"""Jitted wrappers for the WAMI steepest-descent / Hessian kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import (grid_steps, hessian_kernel, hessian_vmem_bytes,
+                     steepest_descent_kernel, vmem_bytes)
+from .ref import hessian_ref, steepest_descent_ref
+
+__all__ = ["steepest_descent", "steepest_descent_oracle",
+           "hessian", "hessian_oracle",
+           "vmem_bytes", "grid_steps", "hessian_vmem_bytes"]
+
+
+@functools.partial(jax.jit, static_argnames=("ports", "unrolls",
+                                             "use_pallas", "interpret"))
+def steepest_descent(gx, gy, *, ports=1, unrolls=8, use_pallas=True,
+                     interpret=False):
+    if use_pallas:
+        return steepest_descent_kernel(gx, gy, ports=ports, unrolls=unrolls,
+                                       interpret=interpret)
+    return steepest_descent_ref(gx, gy)
+
+
+def steepest_descent_oracle(gx, gy):
+    return steepest_descent_ref(gx, gy)
+
+
+@functools.partial(jax.jit, static_argnames=("ports", "unrolls",
+                                             "use_pallas", "interpret"))
+def hessian(sd, *, ports=1, unrolls=8, use_pallas=True, interpret=False):
+    if use_pallas:
+        return hessian_kernel(sd, ports=ports, unrolls=unrolls,
+                              interpret=interpret)
+    return hessian_ref(sd)
+
+
+def hessian_oracle(sd):
+    return hessian_ref(sd)

@@ -1,0 +1,3 @@
+from .ops import grid_steps, vmem_bytes, warp_affine, warp_affine_oracle
+
+__all__ = ["warp_affine", "warp_affine_oracle", "vmem_bytes", "grid_steps"]

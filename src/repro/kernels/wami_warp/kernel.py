@@ -1,0 +1,76 @@
+"""WAMI affine warp (bilinear resample) as a Pallas kernel.
+
+The gather is the part TPUs dislike: arbitrary per-pixel source
+addresses do not map onto the VMEM tiling.  Following the wami_gradient
+halo recipe (DESIGN.md §2), the ops wrapper performs the address
+computation and the four neighbour gathers with XLA — where the
+scatter/gather engine lives — and the Pallas kernel consumes six
+aligned planes (i00, i01, i10, i11, fx, fy) and does the arithmetic
+(the bilinear blend), knob-tiled into ``ports`` lane-banks x
+``unrolls`` rows per grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..wami_common import (grid_steps_model, knob_blocks, parallel_params,
+                           tile_spec, vmem_bytes_model)
+
+__all__ = ["warp_blend_kernel", "warp_gather", "vmem_bytes", "grid_steps"]
+
+_N_IN, _N_OUT = 6, 1
+
+
+def _kernel(i00_ref, i01_ref, i10_ref, i11_ref, fx_ref, fy_ref, out_ref):
+    fx, fy = fx_ref[...], fy_ref[...]
+    top = i00_ref[...] * (1 - fx) + i01_ref[...] * fx
+    bot = i10_ref[...] * (1 - fx) + i11_ref[...] * fx
+    out_ref[...] = top * (1 - fy) + bot * fy
+
+
+def warp_gather(img: jnp.ndarray, p: jnp.ndarray):
+    """XLA side: affine source addresses + 4-neighbour gathers.
+
+    x' = (1+p1) x + p2 y + p3 ;  y' = p4 x + (1+p5) y + p6.
+    Returns (i00, i01, i10, i11, fx, fy), each (H, W).
+    """
+    H, W = img.shape
+    yy, xx = jnp.meshgrid(jnp.arange(H, dtype=img.dtype),
+                          jnp.arange(W, dtype=img.dtype), indexing="ij")
+    sx = (1.0 + p[0]) * xx + p[1] * yy + p[2]
+    sy = p[3] * xx + (1.0 + p[4]) * yy + p[5]
+    x0 = jnp.clip(jnp.floor(sx), 0, W - 2)
+    y0 = jnp.clip(jnp.floor(sy), 0, H - 2)
+    fx = jnp.clip(sx - x0, 0.0, 1.0)
+    fy = jnp.clip(sy - y0, 0.0, 1.0)
+    x0i, y0i = x0.astype(jnp.int32), y0.astype(jnp.int32)
+    return (img[y0i, x0i], img[y0i, x0i + 1],
+            img[y0i + 1, x0i], img[y0i + 1, x0i + 1], fx, fy)
+
+
+def warp_blend_kernel(img: jnp.ndarray, p: jnp.ndarray, *, ports: int = 1,
+                      unrolls: int = 8, interpret: bool = False
+                      ) -> jnp.ndarray:
+    """img: (H, W), p: affine params (6,) -> warped (H, W)."""
+    H, W = img.shape
+    bh, bw = knob_blocks(H, W, ports=ports, unrolls=unrolls)
+    planes = warp_gather(img, p)
+    spec = tile_spec(bh, bw)
+    return pl.pallas_call(
+        _kernel,
+        grid=(H // bh, ports),
+        in_specs=[spec] * 6,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((H, W), img.dtype),
+        compiler_params=parallel_params(),
+        interpret=interpret,
+    )(*planes)
+
+
+vmem_bytes = functools.partial(vmem_bytes_model, n_in=_N_IN, n_out=_N_OUT)
+grid_steps = grid_steps_model

@@ -1,0 +1,26 @@
+"""Jitted wrapper for the WAMI warp kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import grid_steps, vmem_bytes, warp_blend_kernel
+from .ref import warp_affine_ref
+
+__all__ = ["warp_affine", "warp_affine_oracle", "vmem_bytes", "grid_steps"]
+
+
+@functools.partial(jax.jit, static_argnames=("ports", "unrolls",
+                                             "use_pallas", "interpret"))
+def warp_affine(img, p, *, ports=1, unrolls=8, use_pallas=True,
+                interpret=False):
+    if use_pallas:
+        return warp_blend_kernel(img, p, ports=ports, unrolls=unrolls,
+                                 interpret=interpret)
+    return warp_affine_ref(img, p)
+
+
+def warp_affine_oracle(img, p):
+    return warp_affine_ref(img, p)

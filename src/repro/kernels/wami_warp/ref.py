@@ -1,0 +1,27 @@
+"""Oracle: bilinear affine warp (same math as apps.wami.components)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warp_affine_ref"]
+
+
+def warp_affine_ref(img: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    H, W = img.shape
+    yy, xx = jnp.meshgrid(jnp.arange(H, dtype=img.dtype),
+                          jnp.arange(W, dtype=img.dtype), indexing="ij")
+    sx = (1.0 + p[0]) * xx + p[1] * yy + p[2]
+    sy = p[3] * xx + (1.0 + p[4]) * yy + p[5]
+    x0 = jnp.clip(jnp.floor(sx), 0, W - 2)
+    y0 = jnp.clip(jnp.floor(sy), 0, H - 2)
+    fx = jnp.clip(sx - x0, 0.0, 1.0)
+    fy = jnp.clip(sy - y0, 0.0, 1.0)
+    x0i, y0i = x0.astype(jnp.int32), y0.astype(jnp.int32)
+    i00 = img[y0i, x0i]
+    i01 = img[y0i, x0i + 1]
+    i10 = img[y0i + 1, x0i]
+    i11 = img[y0i + 1, x0i + 1]
+    top = i00 * (1 - fx) + i01 * fx
+    bot = i10 * (1 - fx) + i11 * fx
+    return top * (1 - fy) + bot * fy

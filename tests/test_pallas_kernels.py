@@ -1,0 +1,118 @@
+"""Interpret-mode parity: every WAMI stage kernel == its jnp oracle
+across the (ports x unrolls) knob grid (the PallasOracle's functional
+check — DESIGN.md §2)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.wami_change_det import (change_detection,
+                                           change_detection_oracle)
+from repro.kernels.wami_debayer import debayer, debayer_oracle
+from repro.kernels.wami_grayscale import grayscale, grayscale_oracle
+from repro.kernels.wami_steep import (hessian, hessian_oracle,
+                                      steepest_descent,
+                                      steepest_descent_oracle)
+from repro.kernels.wami_warp import warp_affine, warp_affine_oracle
+
+KEY = jax.random.PRNGKey(11)
+H, W = 32, 64
+KNOBS = [(1, 4), (2, 8), (4, 2)]          # (ports, unrolls)
+
+# shear small enough that every warp source fraction stays well inside
+# (0, 1): the floor() cell choice is then identical across compilations
+# and parity is exact (boundary flips would gather a different pixel)
+P_AFFINE = jnp.array([1 / 1024, -1 / 2048, 0.5, 1 / 2048, -1 / 1024, 0.5],
+                     jnp.float32)
+
+
+def _close(a, b, tol=1e-5):
+    fa, fb = jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+    scale = max(1.0, float(jnp.abs(fb).max()))
+    assert float(jnp.abs(fa - fb).max()) / scale < tol
+
+
+@pytest.mark.parametrize("ports,unrolls", KNOBS)
+def test_debayer_parity(ports, unrolls):
+    bayer = jax.random.uniform(KEY, (H, W)) * 1023.0
+    got = debayer(bayer, ports=ports, unrolls=unrolls, interpret=True)
+    _close(got, debayer_oracle(bayer))
+
+
+def test_debayer_odd_block_parity():
+    """Odd unroll counts misalign blocks with the 2x2 Bayer quad; the
+    in-kernel global-parity recovery must still be exact."""
+    bayer = jax.random.uniform(KEY, (30, 64)) * 1023.0
+    got = debayer(bayer, ports=2, unrolls=5, interpret=True)
+    _close(got, debayer_oracle(bayer))
+
+
+@pytest.mark.parametrize("ports,unrolls", KNOBS)
+def test_grayscale_parity(ports, unrolls):
+    rgb = jax.random.uniform(KEY, (H, W, 3)) * 255.0
+    got = grayscale(rgb, ports=ports, unrolls=unrolls, interpret=True)
+    _close(got, grayscale_oracle(rgb))
+
+
+@pytest.mark.parametrize("ports,unrolls", KNOBS)
+def test_steepest_descent_parity(ports, unrolls):
+    ks = jax.random.split(KEY, 2)
+    gx = jax.random.normal(ks[0], (H, W))
+    gy = jax.random.normal(ks[1], (H, W))
+    got = steepest_descent(gx, gy, ports=ports, unrolls=unrolls,
+                           interpret=True)
+    _close(got, steepest_descent_oracle(gx, gy))
+
+
+@pytest.mark.parametrize("ports,unrolls", KNOBS)
+def test_hessian_parity(ports, unrolls):
+    sd = jax.random.normal(KEY, (H, W, 6))
+    got = hessian(sd, ports=ports, unrolls=unrolls, interpret=True)
+    _close(got, hessian_oracle(sd), tol=1e-4)   # accumulation order
+
+
+def test_hessian_block_size_invariance():
+    """The reduction must not depend on the BlockSpec tiling."""
+    sd = jax.random.normal(KEY, (H, W, 6))
+    outs = [hessian(sd, ports=p, unrolls=u, interpret=True)
+            for p, u in ((1, 32), (2, 4), (4, 16))]
+    for o in outs[1:]:
+        _close(o, outs[0], tol=1e-4)
+
+
+@pytest.mark.parametrize("ports,unrolls", KNOBS)
+def test_warp_parity(ports, unrolls):
+    img = jax.random.uniform(KEY, (H, W)) * 255.0
+    got = warp_affine(img, P_AFFINE, ports=ports, unrolls=unrolls,
+                      interpret=True)
+    _close(got, warp_affine_oracle(img, P_AFFINE))
+
+
+@pytest.mark.parametrize("ports,unrolls", KNOBS)
+def test_change_detection_parity(ports, unrolls):
+    ks = jax.random.split(KEY, 2)
+    gray = jax.random.uniform(ks[0], (H, W)) * 100.0
+    mu = gray[..., None] + jax.random.normal(ks[1], (H, W, 3)) * 8.0
+    var = jnp.full((H, W, 3), 36.0)
+    w = jnp.full((H, W, 3), 1.0 / 3.0)
+    m1, mu1, v1, w1 = change_detection(gray, mu, var, w, ports=ports,
+                                       unrolls=unrolls, interpret=True)
+    m2, mu2, v2, w2 = change_detection_oracle(gray, mu, var, w)
+    assert int((m1 != m2).sum()) == 0       # mask is exact (same argmin)
+    _close(mu1, mu2)
+    _close(v1, v2)
+    _close(w1, w2)
+
+
+def test_vmem_models_scale_with_knobs():
+    """More ports => proportionally smaller blocks, more grid steps;
+    more unrolls => proportionally bigger blocks, fewer steps."""
+    from repro.kernels import (wami_change_det, wami_debayer,
+                               wami_grayscale, wami_steep, wami_warp)
+    for mod in (wami_debayer, wami_grayscale, wami_steep, wami_warp,
+                wami_change_det):
+        v1 = mod.vmem_bytes(128, 128, ports=1, unrolls=8)
+        assert mod.vmem_bytes(128, 128, ports=4, unrolls=8) == v1 // 4
+        assert mod.vmem_bytes(128, 128, ports=1, unrolls=16) == v1 * 2
+        g1 = mod.grid_steps(128, 128, ports=1, unrolls=8)
+        assert mod.grid_steps(128, 128, ports=4, unrolls=8) == 4 * g1

@@ -1,0 +1,166 @@
+"""PallasOracle semantics: feasibility, accounting, record/replay
+determinism, fallback routing, and calibration."""
+
+import math
+
+import pytest
+
+from repro.apps.wami.pallas import (default_measurement_path,
+                                    wami_pallas_components,
+                                    wami_pallas_oracle, wami_pallas_session)
+from repro.core import (CalibratedTool, KnobSpace, MeasurementStore,
+                        MissingMeasurementError, OracleLedger, PallasOracle,
+                        Synthesis, cosmos_dse, fit_latency_scales)
+from repro.core.tmg import pipeline_tmg
+
+
+def _fake_timer(name, ports, unrolls, runner):
+    """Deterministic stand-in for the wall clock: Amdahl-ish in the
+    unrolls, sub-linear benefit in ports, component-dependent offset."""
+    return (1e-3 * (32 / unrolls) + 2e-4 * ports ** 0.5
+            + 1e-5 * len(name))
+
+
+def _small():
+    comps = wami_pallas_components(tile=32)
+    sub = {n: comps[n] for n in ("grayscale", "gradient")}
+    spaces = {n: KnobSpace(clock_ns=1.0, max_ports=4, max_unrolls=8)
+              for n in sub}
+    return sub, spaces
+
+
+# ----------------------------------------------------------------------
+# feasibility + accounting
+# ----------------------------------------------------------------------
+def test_non_divisible_knobs_are_infeasible_and_counted():
+    sub, _ = _small()
+    ledger = OracleLedger(PallasOracle(sub, timer=_fake_timer))
+    s = ledger.synthesize("gradient", unrolls=5, ports=2)   # 32 % 5 != 0
+    assert not s.feasible and math.isinf(s.lam)
+    assert ledger.invocations["gradient"] == 1              # Fig. 11 counts it
+    assert ledger.failed["gradient"] == 1
+    ok = ledger.synthesize("gradient", unrolls=4, ports=2)
+    assert ok.feasible and ok.lam > 0 and ok.area > 0
+
+
+def test_vmem_budget_is_the_lambda_constraint():
+    sub, _ = _small()
+    oracle = PallasOracle(sub, timer=_fake_timer, vmem_budget=1024)
+    s = oracle.synthesize("gradient", unrolls=8, ports=1)
+    assert not s.feasible
+
+
+def test_max_states_cap_discards():
+    sub, _ = _small()
+    oracle = PallasOracle(sub, timer=_fake_timer)
+    s = oracle.synthesize("gradient", unrolls=8, ports=1, max_states=1)
+    assert not s.feasible and s.states_per_iter > 1
+
+
+def test_unknown_component_requires_fallback():
+    sub, _ = _small()
+    oracle = PallasOracle(sub, timer=_fake_timer)
+    with pytest.raises(KeyError):
+        oracle.synthesize("matrix_mul", unrolls=2, ports=1)
+
+
+def test_ports_parallelism_and_area_economics():
+    """More banks: lower per-bank latency, higher VMEM area (DESIGN.md §2)."""
+    sub, _ = _small()
+    oracle = PallasOracle(sub, timer=_fake_timer)
+    s1 = oracle.synthesize("gradient", unrolls=4, ports=1)
+    s4 = oracle.synthesize("gradient", unrolls=4, ports=4)
+    assert s4.lam < s1.lam
+    assert s4.area > s1.area
+
+
+# ----------------------------------------------------------------------
+# record / replay
+# ----------------------------------------------------------------------
+def _front(res):
+    return [(p.perf, p.cost) for p in res.pareto()]
+
+
+def test_replay_is_byte_identical_to_fresh_record(tmp_path):
+    sub, spaces = _small()
+    tmg = pipeline_tmg(list(sub))
+    path = str(tmp_path / "m.json")
+
+    fresh = PallasOracle(sub, mode="record",
+                         store=MeasurementStore(path), timer=_fake_timer)
+    r1 = cosmos_dse(tmg, fresh, spaces, delta=0.3)
+    assert fresh.flush() == path
+
+    replay = PallasOracle(sub, mode="replay",
+                          store=MeasurementStore.load(path))
+    r2 = cosmos_dse(tmg, replay, spaces, delta=0.3, workers=8)
+
+    assert _front(r1) == _front(r2)
+    assert r1.invocations == r2.invocations
+    assert [(m.theta_actual, m.cost_actual) for m in r1.mapped] \
+        == [(m.theta_actual, m.cost_actual) for m in r2.mapped]
+
+
+def test_store_roundtrip_and_missing_measurement(tmp_path):
+    path = str(tmp_path / "m.json")
+    store = MeasurementStore(path, meta={"tile": 32})
+    store.put(("gradient", 2, 4), 1.5e-3)
+    store.save()
+    loaded = MeasurementStore.load(path)
+    assert loaded.get(("gradient", 2, 4)) == pytest.approx(1.5e-3)
+    assert loaded.meta == {"tile": 32}
+
+    sub, _ = _small()
+    replay = PallasOracle(sub, mode="replay", store=loaded)
+    s = replay.synthesize("gradient", unrolls=4, ports=2)
+    assert s.feasible and s.detail["wall_s"] == pytest.approx(1.5e-3)
+    with pytest.raises(MissingMeasurementError):
+        replay.synthesize("gradient", unrolls=8, ports=1)
+
+
+def test_checked_in_recording_drives_wami_end_to_end():
+    """Acceptance: cosmos_dse over the full WAMI TMG from the committed
+    recording — deterministic, no TPU, fallback prices the 6x6 stages."""
+    import os
+    assert os.path.exists(default_measurement_path())
+    res1 = wami_pallas_session(0.25, workers=4).run()
+    res2 = wami_pallas_session(0.25, workers=4).run()
+    assert len(res1.characterizations) == 12
+    assert len(res1.mapped) >= 5
+    assert res1.theta_max > res1.theta_min > 0
+    assert _front(res1) == _front(res2)
+    assert res1.invocations == res2.invocations
+
+
+# ----------------------------------------------------------------------
+# calibration
+# ----------------------------------------------------------------------
+class _StubModel:
+    def synthesize(self, component, *, unrolls, ports, max_states=None):
+        return Synthesis(lam=1e-3 * unrolls, area=1.0, ports=ports,
+                         unrolls=unrolls)
+
+    def cdfg_facts(self, component, synth):
+        raise NotImplementedError
+
+
+def test_calibration_recovers_scale():
+    measured = [("k", p, u, 2.0 * 1e-3 * u)
+                for p in (1, 2) for u in (2, 4, 8)]
+    fit = fit_latency_scales(_StubModel(), measured)
+    assert fit.scale("k") == pytest.approx(2.0)
+    assert fit.lam_spread["k"] == pytest.approx(1.0)
+    assert fit.scale("unseen") == 1.0
+
+    cal = CalibratedTool(_StubModel(), fit)
+    s = cal.synthesize("k", unrolls=4, ports=1)
+    assert s.lam == pytest.approx(8e-3)
+    assert s.area == 1.0                      # areas stay backend-local
+
+
+def test_calibration_skips_bad_points():
+    fit = fit_latency_scales(_StubModel(), [("k", 1, 4, float("inf")),
+                                            ("k", 1, 4, -1.0),
+                                            ("k", 1, 4, 4e-3)])
+    assert fit.scale("k") == pytest.approx(1.0)   # only the 1x point fits
+    assert fit.points["k"] == 1
