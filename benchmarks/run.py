@@ -42,6 +42,10 @@ def main() -> None:
                     help="oracle backend for the benches that support it "
                          "(fig4, fig10, kernels); pallas replays the "
                          "checked-in measurement recording")
+    ap.add_argument("--share-plm", action="store_true",
+                    help="memory-co-design variant for the benches that "
+                         "support it (fig10): tile knob axis + shared-PLM "
+                         "system cost via the core.plm planner")
     args = ap.parse_args()
 
     from . import (autoshard_llm, fig4_motivational, fig10_pareto,
@@ -65,10 +69,13 @@ def main() -> None:
             continue
         try:
             import inspect
-            if "backend" in inspect.signature(mod.run).parameters:
-                mod.run(report, backend=args.backend)
-            else:
-                mod.run(report)
+            params = inspect.signature(mod.run).parameters
+            kw = {}
+            if "backend" in params:
+                kw["backend"] = args.backend
+            if "share_plm" in params and args.share_plm:
+                kw["share_plm"] = True
+            mod.run(report, **kw)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{key},ERROR,{type(e).__name__}:{e}", flush=True)

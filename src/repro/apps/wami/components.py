@@ -315,6 +315,8 @@ class WamiComponent:
     gamma_r_override: Optional[int] = None   # e.g. register-cached state
     gamma_w_override: Optional[int] = None   # e.g. register accumulators
     has_plm_access: bool = True
+    base_tile: int = 0             # PLM tile the sizes above are for;
+                                   # 0 = sizes do not depend on the tile
 
     def loop_nest(self) -> LoopNest:
         f = analyze_kernel(self.kernel, self.kernel_args)
@@ -333,7 +335,8 @@ class WamiComponent:
         return ComponentSpec(name=self.name, loop=self.loop_nest(),
                              words_in=self.words_in, words_out=self.words_out,
                              word_bits=32, plm_words=self.plm_words,
-                             outer_repeats=self.outer_repeats)
+                             outer_repeats=self.outer_repeats,
+                             base_tile=self.base_tile)
 
 
 def build_components(tile: int = TILE, frame: int = FRAME,
@@ -357,39 +360,39 @@ def build_components(tile: int = TILE, frame: int = FRAME,
             name="debayer", apply=debayer,
             kernel=_k_debayer, kernel_args=(v(4, 4),),
             trip=t2 // 4, words_in=t2, words_out=3 * t2,
-            outer_repeats=tiles, knobs=ks("debayer")),
+            outer_repeats=tiles, knobs=ks("debayer"), base_tile=tile),
         "grayscale": WamiComponent(
             name="grayscale", apply=grayscale,
             kernel=_k_grayscale, kernel_args=(v(3),),
             trip=t2, words_in=3 * t2, words_out=t2,
-            outer_repeats=tiles, knobs=ks("grayscale")),
+            outer_repeats=tiles, knobs=ks("grayscale"), base_tile=tile),
         "gradient": WamiComponent(
             name="gradient", apply=gradient,
             kernel=_k_gradient, kernel_args=(v(5),),
             trip=t2, words_in=t2, words_out=2 * t2,
-            outer_repeats=tiles, knobs=ks("gradient")),
+            outer_repeats=tiles, knobs=ks("gradient"), base_tile=tile),
         "steep_descent": WamiComponent(
             name="steep_descent", apply=steepest_descent,
             kernel=_k_steep, kernel_args=(v(2), v(2)),
             trip=t2, words_in=2 * t2, words_out=6 * t2,
-            outer_repeats=tiles, knobs=ks("steep_descent")),
+            outer_repeats=tiles, knobs=ks("steep_descent"), base_tile=tile),
         "hessian": WamiComponent(
             name="hessian", apply=hessian,
             kernel=_k_hessian, kernel_args=(v(6), v(21)),
             trip=t2, words_in=6 * t2, words_out=21,
-            outer_repeats=tiles, knobs=ks("hessian"),
+            outer_repeats=tiles, knobs=ks("hessian"), base_tile=tile,
             gamma_w_override=1),          # accumulator lives in registers
         "sd_update": WamiComponent(
             name="sd_update", apply=sd_update,
             kernel=_k_sd_update, kernel_args=(v(6), s, v(6)),
             trip=t2, words_in=7 * t2, words_out=6,
-            outer_repeats=tiles * n_lk, knobs=ks("sd_update"),
+            outer_repeats=tiles * n_lk, knobs=ks("sd_update"), base_tile=tile,
             gamma_w_override=1),
         "matrix_sub": WamiComponent(
             name="matrix_sub", apply=matrix_sub,
             kernel=_k_mat_sub, kernel_args=(s, s),
             trip=t2, words_in=2 * t2, words_out=t2,
-            outer_repeats=tiles * n_lk, knobs=ks("matrix_sub")),
+            outer_repeats=tiles * n_lk, knobs=ks("matrix_sub"), base_tile=tile),
         "matrix_add": WamiComponent(
             name="matrix_add", apply=matrix_add,
             kernel=_k_mat_add, kernel_args=(s, s),
@@ -409,12 +412,12 @@ def build_components(tile: int = TILE, frame: int = FRAME,
             name="warp", apply=warp_affine,
             kernel=_k_warp, kernel_args=(v(4), v(2)),
             trip=t2, words_in=t2, words_out=t2,
-            outer_repeats=tiles * n_lk, knobs=ks("warp")),
+            outer_repeats=tiles * n_lk, knobs=ks("warp"), base_tile=tile),
         "change_det": WamiComponent(
             name="change_det", apply=change_detection,
             kernel=_k_change_det, kernel_args=(s, v(9)),
             trip=t2, words_in=10 * t2, words_out=10 * t2,
-            outer_repeats=tiles, knobs=ks("change_det"),
+            outer_repeats=tiles, knobs=ks("change_det"), base_tile=tile,
             gamma_r_override=1),          # GMM state cached in registers
     }
     return comps

@@ -33,15 +33,17 @@ import jax.numpy as jnp
 from ...core.hlsim import HLSTool
 from ...core.pallas_oracle import (MeasurementStore, PallasKernelSpec,
                                    PallasOracle)
+from ...core.plm.units import UnitSystem, fit_unit_system
 from ...core.session import ExplorationSession
 from ...kernels import (wami_change_det, wami_debayer, wami_gradient,
                         wami_grayscale, wami_steep, wami_warp)
 from . import components as C
 from .pipeline import (MATRIX_INV_LATENCY_S, wami_hls_tool,
-                       wami_knob_spaces, wami_tmg)
+                       wami_knob_spaces, wami_plm_planner, wami_tmg)
 
 __all__ = ["wami_pallas_components", "wami_pallas_oracle",
-           "wami_pallas_session", "default_measurement_path"]
+           "wami_pallas_session", "wami_unit_system", "wami_plm_session",
+           "default_measurement_path"]
 
 _REPO_ROOT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "..", "..", ".."))
@@ -122,20 +124,27 @@ def wami_pallas_oracle(mode: str = "replay", *, tile: int = C.TILE,
                        store_path: Optional[str] = None,
                        fallback: Optional[HLSTool] = None,
                        interpret: bool = True,
+                       flush_every: int = 16,
                        timer=None, **kwargs) -> PallasOracle:
     """The measured WAMI oracle.  Default: deterministic replay from the
-    checked-in recording (CI-safe, no TPU)."""
+    checked-in recording (CI-safe, no TPU).  Record mode flushes the
+    store every ``flush_every`` timings through the atomic rename
+    protocol and resumes from whatever an interrupted campaign already
+    flushed — killed recordings never re-pay for timed points."""
     if store is None and mode in ("record", "replay"):
         path = store_path or default_measurement_path(tile)
+        autoflush = flush_every if mode == "record" else 0
         if mode == "replay" or os.path.exists(path):
-            store = MeasurementStore.load(path)
+            store = MeasurementStore.load(path, flush_every=autoflush)
         else:
             store = MeasurementStore(path, meta={"tile": tile,
-                                                 "interpret": interpret})
+                                                 "interpret": interpret},
+                                     flush_every=autoflush)
     return PallasOracle(wami_pallas_components(tile), mode=mode,
                         store=store,
                         fallback=fallback or wami_hls_tool(),
-                        interpret=interpret, timer=timer, **kwargs)
+                        interpret=interpret, timer=timer,
+                        native_tile=tile, **kwargs)
 
 
 def wami_pallas_session(delta: float = 0.25, *, mode: str = "replay",
@@ -148,5 +157,58 @@ def wami_pallas_session(delta: float = 0.25, *, mode: str = "replay",
     tool = oracle or wami_pallas_oracle(mode, tile=tile)
     return ExplorationSession(wami_tmg(), tool, wami_knob_spaces(),
                               delta=delta,
+                              fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
+                              workers=workers, **kwargs)
+
+
+def wami_unit_system(tile: int = C.TILE,
+                     store: Optional[MeasurementStore] = None
+                     ) -> UnitSystem:
+    """Exchange rates fitted from the checked-in recording: per-component
+    latency scales plus one global bytes-per-mm² area rate.  Derived
+    from the store's sorted entries and the deterministic VMEM/area
+    formulas — byte-reproducible on any machine holding the recording."""
+    store = store or MeasurementStore.load(default_measurement_path(tile))
+    return fit_unit_system(store, wami_pallas_components(tile),
+                           wami_hls_tool())
+
+
+def wami_plm_session(delta: float = 0.25, *, tile: int = C.TILE,
+                     tile_sizes: Optional[tuple] = (64, 128),
+                     workers: int = 1, share_plm: bool = True,
+                     **kwargs) -> ExplorationSession:
+    """The memory-co-design WAMI drive on the checked-in recording.
+
+    Everything the PLM subsystem adds, wired together (docs/memory.md):
+
+      * the tile knob is a third axis on the tile-scaled components —
+        native-tile points replay the recording, other tiles are priced
+        by the unit-calibrated analytical fallback (``missing="fallback"``
+        also covers mapped unrolls the recorded walk never touched, so
+        the drive stays deterministic and machine-free);
+      * the fallback reports measured-axis latencies and VMEM-byte areas
+        (:func:`wami_unit_system`), so the mixed system front is
+        unit-clean;
+      * the map phase prices the memory subsystem through the PLM
+        planner: the TMG certifies the six LK-loop components mutually
+        exclusive and their PLMs become one shared multi-bank memory.
+
+    ``tile_sizes`` defaults to (64, 128) rather than the analytical
+    variant's full ``WAMI_TILE_SIZES``: only tile 128 is measured, and a
+    256 tile would add a third entirely-fallback-priced ladder to a
+    drive whose point is anchoring the axis in measurements (record a
+    tile-256 store and widen this once the ROADMAP's multi-tile
+    recordings land).
+    """
+    store = MeasurementStore.load(default_measurement_path(tile))
+    units = wami_unit_system(tile, store=store)
+    fallback = units.calibrated(wami_hls_tool())
+    oracle = PallasOracle(wami_pallas_components(tile), mode="replay",
+                          store=store, fallback=fallback,
+                          native_tile=tile, missing="fallback")
+    if share_plm:
+        kwargs.setdefault("memory_planner", wami_plm_planner())
+    spaces = wami_knob_spaces(tile_sizes=tuple(tile_sizes or ()))
+    return ExplorationSession(wami_tmg(), oracle, spaces, delta=delta,
                               fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
                               workers=workers, **kwargs)

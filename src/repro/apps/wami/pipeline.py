@@ -23,15 +23,15 @@ import jax
 import jax.numpy as jnp
 
 from ...core import (CosmosResult, ExhaustiveResult, ExplorationSession,
-                     HLSTool, KnobSpace, OracleLedger, Place, TMG, Transition,
-                     cosmos_dse, exhaustive_dse)
+                     HLSTool, KnobSpace, OracleLedger, Place, PLMPlanner,
+                     TMG, Transition, cosmos_dse, exhaustive_dse)
 from . import components as C
-from .knobs import WAMI_KNOB_TABLE, wami_knob_space
+from .knobs import (WAMI_KNOB_TABLE, WAMI_TILE_SIZES, wami_knob_space)
 
 __all__ = ["lucas_kanade", "wami_app", "wami_tmg", "wami_hls_tool",
            "wami_knob_spaces", "wami_session", "wami_cosmos",
-           "wami_exhaustive", "WAMI_KNOB_TABLE",
-           "MATRIX_INV_LATENCY_S"]
+           "wami_exhaustive", "wami_plm_planner", "WAMI_KNOB_TABLE",
+           "WAMI_TILE_SIZES", "MATRIX_INV_LATENCY_S"]
 
 # Matrix-Inv runs in software (Section 7.1): fixed effective latency.
 # 6x6 Gauss-Jordan on an embedded core, amortized per frame.
@@ -144,23 +144,51 @@ def wami_tmg(buffers: int = 2, frames_in_flight: int = 4) -> TMG:
 
 def wami_hls_tool(noise: float = 1.0, tile: int = C.TILE,
                   frame: int = C.FRAME) -> HLSTool:
+    """The analytical WAMI oracle.  The retile factory rebuilds the
+    component table exactly at a requested tile (trip counts, PLM sizes
+    and outer repeats all recomputed from the frame geometry), which is
+    what makes the tile knob honest for this backend."""
     comps = C.build_components(tile=tile, frame=frame)
-    return HLSTool({n: c.spec() for n, c in comps.items()}, noise=noise)
+    return HLSTool({n: c.spec() for n, c in comps.items()}, noise=noise,
+                   retile=lambda t: {
+                       n: c.spec()
+                       for n, c in C.build_components(tile=t,
+                                                      frame=frame).items()})
 
 
-def wami_knob_spaces(tile: int = C.TILE, frame: int = C.FRAME
+def wami_knob_spaces(tile: int = C.TILE, frame: int = C.FRAME,
+                     tile_sizes: Tuple[int, ...] = ()
                      ) -> Dict[str, KnobSpace]:
+    """Per-component knob bounds; pass ``tile_sizes`` (e.g.
+    ``WAMI_TILE_SIZES``) to open the tile axis on the tile-scaled
+    components."""
     comps = C.build_components(tile=tile, frame=frame)
-    return {n: c.knobs for n, c in comps.items()}
+    if not tile_sizes:
+        return {n: c.knobs for n, c in comps.items()}
+    return {n: wami_knob_space(n, tile_sizes=tile_sizes) for n in comps}
+
+
+def wami_plm_planner() -> PLMPlanner:
+    """The WAMI memory planner: compatibility from the Fig. 8 TMG
+    (certifying the LK refinement loop mutually exclusive), Matrix-Inv
+    excluded (software, no PLM)."""
+    return PLMPlanner(wami_tmg(), exclude=("matrix_inv",))
 
 
 def wami_session(delta: float = 0.25, noise: float = 1.0, *,
-                 workers: int = 1, **kwargs) -> ExplorationSession:
+                 workers: int = 1, share_plm: bool = False,
+                 tile_sizes: Tuple[int, ...] = (),
+                 **kwargs) -> ExplorationSession:
     """An :class:`ExplorationSession` over the WAMI system — the object
     API behind :func:`wami_cosmos` (phase control, progress events,
-    persistent caching, mid-run serialize/restore)."""
+    persistent caching, mid-run serialize/restore).  ``share_plm``
+    attaches the system-level PLM planner (docs/memory.md);
+    ``tile_sizes`` opens the tile knob axis."""
+    if share_plm:
+        kwargs.setdefault("memory_planner", wami_plm_planner())
     return ExplorationSession(wami_tmg(), wami_hls_tool(noise=noise),
-                              wami_knob_spaces(), delta=delta,
+                              wami_knob_spaces(tile_sizes=tile_sizes),
+                              delta=delta,
                               fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
                               workers=workers, **kwargs)
 

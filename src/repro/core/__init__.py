@@ -22,6 +22,9 @@ over a batched synthesis oracle:
     measured backend: knob-parameterized Pallas kernels compiled + timed
     per point with record/replay, and the fit of the analytical tool's
     latency constants to those measurements (docs/backends.md)
+  * :mod:`repro.core.plm` — the system-level PLM planner: the tile knob
+    axis, the TMG non-concurrency certificate, shared-bank memory
+    plans, and the one-cost-unit exchange rates (docs/memory.md)
 """
 
 from .characterize import CharacterizationResult, characterize_component, spans
@@ -36,7 +39,10 @@ from .oracle import (CountingTool, InvocationRecord, InvocationRequest,
                      Oracle, OracleBatchMixin, OracleLedger,
                      PersistentOracleCache)
 from .calibrate import (CalibratedTool, CalibrationFit, calibrate_to_records,
-                        fit_latency_scales)
+                        fit_area_scale, fit_latency_scales)
+from .plm import (MemoryCompatGraph, MemoryGroup, MemoryPlan, PLMPlanner,
+                  PLMRequirement, UnitSystem, exclusive_pairs,
+                  fit_unit_system)
 from .pallas_oracle import (MeasurementStore, MissingMeasurementError,
                             PallasKernelSpec, PallasOracle)
 from .pareto import (DesignPoint, check_delta_curve, dominates_max_min,
@@ -58,7 +64,9 @@ __all__ = [
     "PallasOracle", "PallasKernelSpec", "MeasurementStore",
     "MissingMeasurementError",
     "CalibratedTool", "CalibrationFit", "fit_latency_scales",
-    "calibrate_to_records",
+    "fit_area_scale", "calibrate_to_records",
+    "PLMRequirement", "MemoryGroup", "MemoryPlan", "MemoryCompatGraph",
+    "exclusive_pairs", "PLMPlanner", "UnitSystem", "fit_unit_system",
     "ExplorationSession", "ProgressEvent",
     "ComponentSpec", "LoopNest", "HLSTool", "MemGen", "PLM", "PLMSpec",
     "CharacterizationResult", "characterize_component", "spans",

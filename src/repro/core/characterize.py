@@ -48,8 +48,12 @@ class CharacterizationResult:
 
 
 def _point(component: str, s: Synthesis) -> DesignPoint:
-    return DesignPoint(perf=s.lam, cost=s.area,
-                       knobs=(("ports", s.ports), ("unrolls", s.unrolls)),
+    knobs = [("ports", s.ports), ("unrolls", s.unrolls)]
+    if s.tile:
+        # the third knob axis; only labelled when the space declared it,
+        # so two-knob characterizations stay byte-identical to the seed
+        knobs.append(("tile", s.tile))
+    return DesignPoint(perf=s.lam, cost=s.area, knobs=tuple(knobs),
                        meta=(("states", float(s.states_per_iter)),))
 
 
@@ -69,56 +73,67 @@ def characterize_component(tool: OracleLedger, component: str,
     before = tool.total(component)
     regions: List[Region] = []
     points: List[DesignPoint] = []
-    best_lam_min = float("inf")
 
-    for ports in space.ports():
-        # ---- lower-right corner: unrolls = ports (line 3) -------------
-        lr = tool.synthesize(component, unrolls=max(1, ports), ports=ports)
-        if not lr.feasible:
-            continue
-        facts = tool.cdfg_facts(component, lr)
-        lam_max, area_min = lr.lam, lr.area
-        mu_min = max(1, ports)
+    for tile in space.tiles():
+        # the no-latency-gain pruning is an argument about one port
+        # ladder (Section 7.2); it resets per tile — regions at a
+        # smaller tile are cheaper-but-slower and stay Pareto-relevant
+        # even when a larger tile is faster everywhere, and the kept
+        # set must not depend on tile_sizes ordering
+        best_lam_min = float("inf")
+        for ports in space.ports():
+            # ---- lower-right corner: unrolls = ports (line 3) ---------
+            lr = tool.synthesize(component, unrolls=max(1, ports),
+                                 ports=ports, tile=tile)
+            if not lr.feasible:
+                continue
+            facts = tool.cdfg_facts(component, lr)
+            lam_max, area_min = lr.lam, lr.area
+            mu_min = max(1, ports)
 
-        # ---- upper-left corner (lines 4-7) -----------------------------
-        ul: Optional[Synthesis] = None
-        mu_max = mu_min
-        if facts.has_plm_access:
-            for unrolls in range(space.max_unrolls, max(1, ports), -1):
-                cap = facts.h(unrolls, ports)   # Eq. (1) upper bound
-                cand = tool.synthesize(component, unrolls=unrolls,
-                                       ports=ports, max_states=cap)
-                if cand.feasible:
-                    ul, mu_max = cand, unrolls
-                    break
-        else:
-            # Optional neighbourhood search (Section 5, last paragraph):
-            # synthesize around max_unrolls and keep a local Pareto point.
-            cands: List[Synthesis] = []
-            lo = max(max(1, ports) + 1, space.max_unrolls - neighbourhood)
-            for unrolls in range(space.max_unrolls, lo - 1, -1):
-                cand = tool.synthesize(component, unrolls=unrolls, ports=ports)
-                if cand.feasible:
-                    cands.append(cand)
-            if cands:
-                ul = min(cands, key=lambda s: (s.lam, s.area))
-                mu_max = ul.unrolls
+            # ---- upper-left corner (lines 4-7) -------------------------
+            ul: Optional[Synthesis] = None
+            mu_max = mu_min
+            if facts.has_plm_access:
+                for unrolls in range(space.max_unrolls, max(1, ports), -1):
+                    cap = facts.h(unrolls, ports)   # Eq. (1) upper bound
+                    cand = tool.synthesize(component, unrolls=unrolls,
+                                           ports=ports, max_states=cap,
+                                           tile=tile)
+                    if cand.feasible:
+                        ul, mu_max = cand, unrolls
+                        break
+            else:
+                # Optional neighbourhood search (Section 5, last
+                # paragraph): synthesize around max_unrolls and keep a
+                # local Pareto point.
+                cands: List[Synthesis] = []
+                lo = max(max(1, ports) + 1, space.max_unrolls - neighbourhood)
+                for unrolls in range(space.max_unrolls, lo - 1, -1):
+                    cand = tool.synthesize(component, unrolls=unrolls,
+                                           ports=ports, tile=tile)
+                    if cand.feasible:
+                        cands.append(cand)
+                if cands:
+                    ul = min(cands, key=lambda s: (s.lam, s.area))
+                    mu_max = ul.unrolls
 
-        if ul is None:
-            ul, mu_max = lr, mu_min  # degenerate single-point region
+            if ul is None:
+                ul, mu_max = lr, mu_min  # degenerate single-point region
 
-        region = Region(ports=ports,
-                        lam_max=lam_max, area_min=area_min,
-                        lam_min=ul.lam, area_max=ul.area,
-                        mu_min=mu_min, mu_max=mu_max, facts=facts)
+            region = Region(ports=ports,
+                            lam_max=lam_max, area_min=area_min,
+                            lam_min=ul.lam, area_max=ul.area,
+                            mu_min=mu_min, mu_max=mu_max, facts=facts,
+                            tile=tile)
 
-        improves = region.lam_min < best_lam_min * (1.0 - 1e-9)
-        if improves or not prune_dominated_regions or not regions:
-            regions.append(region)
-            best_lam_min = min(best_lam_min, region.lam_min)
-            points.append(_point(component, lr))
-            if ul is not lr:
-                points.append(_point(component, ul))
+            improves = region.lam_min < best_lam_min * (1.0 - 1e-9)
+            if improves or not prune_dominated_regions or not regions:
+                regions.append(region)
+                best_lam_min = min(best_lam_min, region.lam_min)
+                points.append(_point(component, lr))
+                if ul is not lr:
+                    points.append(_point(component, ul))
 
     invocations = tool.total(component) - before
     failed = tool.failed.get(component, 0)

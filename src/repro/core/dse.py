@@ -92,10 +92,12 @@ def exhaustive_dse(components: Sequence[str], tool,
     for name in components:
         space = spaces[name]
         start = len(requests)
-        for ports in space.ports():
-            for unrolls in range(max(1, ports), space.max_unrolls + 1):
-                requests.append(InvocationRequest(
-                    component=name, unrolls=unrolls, ports=ports))
+        for tile in space.tiles():
+            for ports in space.ports():
+                for unrolls in range(max(1, ports), space.max_unrolls + 1):
+                    requests.append(InvocationRequest(
+                        component=name, unrolls=unrolls, ports=ports,
+                        tile=tile))
         spans.append((name, start, len(requests)))
 
     results = ctool.evaluate_batch(requests, workers=workers)
@@ -105,9 +107,11 @@ def exhaustive_dse(components: Sequence[str], tool,
         pts: List[DesignPoint] = []
         for req, s in zip(requests[start:stop], results[start:stop]):
             if s.feasible:
-                pts.append(DesignPoint(
-                    perf=s.lam, cost=s.area,
-                    knobs=(("ports", req.ports), ("unrolls", req.unrolls))))
+                knobs = [("ports", req.ports), ("unrolls", req.unrolls)]
+                if req.tile:
+                    knobs.append(("tile", req.tile))
+                pts.append(DesignPoint(perf=s.lam, cost=s.area,
+                                       knobs=tuple(knobs)))
         points[name] = pts
     fronts = {n: pareto_front_min_min(p) for n, p in points.items()}
     inv = {n: ctool.invocations[n] for n, _, _ in spans

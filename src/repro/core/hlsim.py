@@ -25,12 +25,13 @@ from __future__ import annotations
 
 import hashlib
 import math
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, Optional
 
 from .knobs import CDFGFacts, Synthesis
 from .memgen import MemGen, PLMSpec
 from .oracle import OracleBatchMixin
+from .plm.spec import PLMRequirement
 
 __all__ = ["LoopNest", "ComponentSpec", "HLSTool"]
 
@@ -70,9 +71,32 @@ class ComponentSpec:
     word_bits: int = 32
     plm_words: int = 0         # PLM capacity; defaults to in+out
     outer_repeats: int = 1     # executions of the loop per accelerator run
+    base_tile: int = 0         # native PLM tile edge; 0 = tile-invariant
 
     def plm_size(self) -> int:
         return self.plm_words or (self.words_in + self.words_out)
+
+    def retile(self, tile: int) -> "ComponentSpec":
+        """Rescale the spec to a different PLM tile edge.
+
+        Generic quadratic model: trip / words / PLM capacity scale with
+        the tile area, outer repeats inversely (the frame is fixed).  A
+        component with ``base_tile == 0`` is tile-invariant and returns
+        itself — the tile knob is a no-op for it.  Backends with exact
+        per-tile component tables (apps/wami) bypass this via the
+        ``HLSTool(retile=...)`` factory instead.
+        """
+        if not tile or not self.base_tile or tile == self.base_tile:
+            return self
+        s = (tile / self.base_tile) ** 2
+        loop = replace(self.loop, trip=max(1, round(self.loop.trip * s)))
+        return replace(
+            self, loop=loop,
+            words_in=max(1, round(self.words_in * s)),
+            words_out=max(1, round(self.words_out * s)),
+            plm_words=round(self.plm_words * s) if self.plm_words else 0,
+            outer_repeats=max(1, round(self.outer_repeats / s)),
+            base_tile=tile)
 
 
 # 32nm-flavoured area constants (mm^2).  Absolute values are calibrated so
@@ -98,16 +122,37 @@ class HLSTool(OracleBatchMixin):
 
     def __init__(self, components: Dict[str, ComponentSpec], *,
                  memgen: Optional[MemGen] = None, noise: float = 1.0,
-                 seed: str = "cosmos"):
+                 seed: str = "cosmos",
+                 retile: Optional[Callable[[int], Dict[str, ComponentSpec]]]
+                 = None):
         self.components = dict(components)
         self.memgen = memgen or MemGen()
         self.noise = float(noise)
         self.seed = seed
+        # exact per-tile component tables (one call per tile, memoized);
+        # absent, ComponentSpec.retile's quadratic model is used
+        self._retile = retile
+        self._tile_specs: Dict[int, Dict[str, ComponentSpec]] = {}
+
+    def _spec_at(self, component: str, tile: int) -> ComponentSpec:
+        base = self.components[component]
+        if not tile or tile == base.base_tile:
+            return base
+        if self._retile is not None:
+            specs = self._tile_specs.get(tile)
+            if specs is None:
+                # benign race: retile factories are pure, setdefault keeps one
+                specs = self._tile_specs.setdefault(tile,
+                                                    dict(self._retile(tile)))
+            if component in specs:
+                return specs[component]
+        return base.retile(tile)
 
     # ------------------------------------------------------------------
     # Scheduling model
     # ------------------------------------------------------------------
-    def _states_per_iter(self, spec: ComponentSpec, unrolls: int, ports: int) -> int:
+    def _states_per_iter(self, spec: ComponentSpec, unrolls: int, ports: int,
+                         tile_key: int = 0) -> int:
         """States the scheduler needs for one unrolled loop iteration."""
         ln = spec.loop
         # Memory states: reads from the same array are serialized over the
@@ -129,7 +174,11 @@ class HLSTool(OracleBatchMixin):
         # syntheses violate the lambda-constraint and some points
         # Pareto-dominated, as in Fig. 4's 7u/8u/9u).
         if self.noise > 0:
-            r = _hash01(self.seed, spec.name, unrolls, ports)
+            # hash key grows the tile only when it changes the spec, so a
+            # native-tile request reproduces the two-knob results exactly
+            key = ((self.seed, spec.name, unrolls, ports, tile_key)
+                   if tile_key else (self.seed, spec.name, unrolls, ports))
+            r = _hash01(*key)
             p_extra = self.noise * (0.08 + 0.012 * unrolls)
             if r < p_extra:
                 states += 1 + int(r * 7919) % max(1, unrolls // 4 + 1)
@@ -159,15 +208,17 @@ class HLSTool(OracleBatchMixin):
     # ------------------------------------------------------------------
     def synthesize(self, component: str, *, unrolls: int, ports: int,
                    max_states: Optional[int] = None,
-                   clock_ns: float = 1.0) -> Synthesis:
-        spec = self.components[component]
-        states = self._states_per_iter(spec, unrolls, ports)
+                   clock_ns: float = 1.0, tile: int = 0) -> Synthesis:
+        base = self.components[component]
+        spec = self._spec_at(component, tile)
+        tile_key = 0 if spec == base else tile
+        states = self._states_per_iter(spec, unrolls, ports, tile_key)
         if max_states is not None and states > max_states:
             # lambda-constraint violated: the synthesis fails and the
             # point is discarded (Algorithm 1 lines 5-7).
             return Synthesis(lam=float("inf"), area=float("inf"), ports=ports,
                              unrolls=unrolls, states_per_iter=states,
-                             feasible=False)
+                             feasible=False, tile=tile)
         lam = self._latency_s(spec, unrolls, ports, states, clock_ns)
         area = self._datapath_area(spec, unrolls, states)
         plm = self.memgen.generate(PLMSpec(
@@ -176,12 +227,31 @@ class HLSTool(OracleBatchMixin):
                          unrolls=unrolls, states_per_iter=states,
                          feasible=True,
                          detail={"area_logic": area, "area_plm": plm.area,
-                                 "banks": float(plm.banks)})
+                                 "banks": float(plm.banks),
+                                 "plm_words": float(spec.plm_size()),
+                                 "word_bits": float(spec.word_bits)},
+                         tile=tile)
+
+    def plm_requirement(self, component: str, synth: Synthesis
+                        ) -> PLMRequirement:
+        """What the synthesized point demands of the memory subsystem —
+        the input of the system-level PLM planner (core.plm.planner)."""
+        spec = self._spec_at(component, synth.tile)
+        area_plm = synth.detail.get("area_plm")
+        if area_plm is None:
+            area_plm = self.memgen.generate(PLMSpec(
+                words=spec.plm_size(), word_bits=spec.word_bits,
+                ports=synth.ports)).area
+        logic = synth.detail.get("area_logic", synth.area - area_plm)
+        return PLMRequirement(component=component, capacity=spec.plm_size(),
+                              word_bits=spec.word_bits, ports=synth.ports,
+                              area_plm=float(area_plm),
+                              area_logic=float(logic), unit="mm2")
 
     def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts:
         """Eq. (1) inputs 'inferred by traversing the CDFG created by the
         HLS tool for scheduling the lower-right point' (Section 5)."""
-        ln = self.components[component].loop
+        ln = self._spec_at(component, synth.tile).loop
         # eta: states not attributable to PLM accesses, observed on the
         # synthesized lower-right point.
         mem_states = (math.ceil(ln.gamma_r * synth.unrolls / synth.ports)

@@ -42,21 +42,36 @@ def powers_of_two(lo: int, hi: int) -> List[int]:
 
 @dataclass(frozen=True)
 class KnobSpace:
-    """Designer-provided exploration bounds (Algorithm 1 inputs)."""
+    """Designer-provided exploration bounds (Algorithm 1 inputs).
+
+    ``tile_sizes`` is the optional third knob axis: the PLM tile edge the
+    component processes per execution.  Empty (the default) keeps the
+    component at its native tile — the paper's two-knob space — and the
+    sentinel tile value 0 is used everywhere to mean "native tile".  A
+    non-empty tuple makes characterization walk Algorithm 1 once per
+    tile, trading PLM *capacity* against PLM *port count* (docs/memory.md).
+    """
 
     clock_ns: float            # target clock period (ns)
     max_ports: int             # PLM ports, explored over powers of two
     max_unrolls: int           # loop unrolling upper bound
     min_ports: int = 1
+    tile_sizes: Tuple[int, ...] = ()   # PLM tile edges; () = native only
 
     def ports(self) -> List[int]:
         return powers_of_two(self.min_ports, self.max_ports)
+
+    def tiles(self) -> List[int]:
+        """Tile axis values; [0] (native tile) when the axis is unused."""
+        return list(self.tile_sizes) if self.tile_sizes else [0]
 
     def __post_init__(self):
         if self.max_ports < self.min_ports:
             raise ValueError("max_ports < min_ports")
         if self.max_unrolls < 1:
             raise ValueError("max_unrolls < 1")
+        if any(t <= 0 for t in self.tile_sizes):
+            raise ValueError("tile_sizes must be positive")
 
 
 @dataclass(frozen=True)
@@ -98,11 +113,13 @@ class Synthesis:
     states_per_iter: int = 0    # scheduler states per loop iteration
     feasible: bool = True       # False when the lambda-constraint failed
     detail: Dict[str, float] = field(default_factory=dict)
+    tile: int = 0               # PLM tile edge; 0 = the component's native
 
 
 @dataclass
 class Region:
-    """A design-space region (fixed port count) found by Algorithm 1."""
+    """A design-space region (fixed port count and tile) found by
+    Algorithm 1.  ``tile`` is 0 when the tile axis is unused."""
 
     ports: int
     lam_max: float              # lower-right corner: slowest, smallest
@@ -112,6 +129,7 @@ class Region:
     mu_min: int                 # unrolls at lam_max (== ports, line 3)
     mu_max: int                 # unrolls at lam_min (lambda-constraint sat)
     facts: Optional[CDFGFacts] = None
+    tile: int = 0               # PLM tile edge of every point in the region
 
     def contains_lambda(self, lam: float) -> bool:
         return self.lam_min - 1e-12 <= lam <= self.lam_max + 1e-12
@@ -135,6 +153,11 @@ class SynthesisTool(Protocol):
     scheduler cannot fit an iteration within that many states.
     ``cdfg_facts`` exposes the Eq. (1) inputs extracted from the CDFG of a
     completed synthesis.
+
+    Backends that support the tile knob accept an extra ``tile=<edge>``
+    keyword; the engine only passes it when a knob space declares a tile
+    axis, so two-knob backends (and pre-tile user tools) keep working
+    unchanged.
     """
 
     def synthesize(self, component: str, *, unrolls: int, ports: int,

@@ -56,6 +56,36 @@ def _sorted_regions(regions: Sequence[Region]) -> List[Region]:
     return sorted(regions, key=lambda r: r.lam_max, reverse=True)
 
 
+def _area_at(r: Region, lam: float) -> float:
+    """Linear area estimate inside a region at latency ``lam`` (between
+    the two characterized corners) — the ranking key when several
+    regions contain the same latency target."""
+    if r.lam_max <= r.lam_min:
+        return min(r.area_min, r.area_max)
+    t = (r.lam_max - lam) / (r.lam_max - r.lam_min)
+    return r.area_min + min(1.0, max(0.0, t)) * (r.area_max - r.area_min)
+
+
+def _pick_region(regs: Sequence[Region], lam_target: float
+                 ) -> Optional[Region]:
+    """The region to map ``lam_target`` in.
+
+    Within one tile the paper's rule stands: first containing region in
+    lam_max-descending order (fewest ports) — byte-compatible with the
+    two-knob engine and with checked-in recordings of its walks.  The
+    tile axis makes cross-tile overlap the norm, and there the slowest
+    region is frequently a far more expensive large-tile one, so among
+    candidates from *different* tiles we take the one expected cheapest
+    at the target (legacy order as the deterministic tie-break)."""
+    cands = [r for r in regs if r.contains_lambda(lam_target)]
+    if not cands:
+        return None
+    if len({r.tile for r in cands}) <= 1:
+        return cands[0]                      # regs is lam_max-descending
+    return min(cands, key=lambda r: (_area_at(r, lam_target),
+                                     -r.lam_max, r.ports, r.tile))
+
+
 def map_target(tool: OracleLedger, component: str,
                regions: Sequence[Region], lam_target: float,
                *, max_unroll_bumps: int = 4) -> MapOutcome:
@@ -64,14 +94,15 @@ def map_target(tool: OracleLedger, component: str,
     if not regs:
         raise ValueError(f"{component}: no regions")
 
-    # 1. find the region containing lam_target
-    region = next((r for r in regs if r.contains_lambda(lam_target)), None)
+    # 1. find the region to map in (cheapest containing lam_target)
+    region = _pick_region(regs, lam_target)
 
     if region is None:
         if lam_target > regs[0].lam_max:
             # slower than every implementation: keep the cheapest point
             r = regs[0]
-            s = tool.synthesize(component, unrolls=r.mu_min, ports=r.ports)
+            s = tool.synthesize(component, unrolls=r.mu_min, ports=r.ports,
+                                tile=r.tile)
             return MapOutcome(component, s, r, lam_target, fallback="slowest")
         faster = [r for r in regs if r.lam_max < lam_target]
         if faster:
@@ -79,12 +110,14 @@ def map_target(tool: OracleLedger, component: str,
             # of the next region with a larger number of ports (already
             # synthesized during characterization -> cache hit).
             r = max(faster, key=lambda r: r.lam_max)
-            s = tool.synthesize(component, unrolls=r.mu_min, ports=r.ports)
+            s = tool.synthesize(component, unrolls=r.mu_min, ports=r.ports,
+                                tile=r.tile)
             return MapOutcome(component, s, r, lam_target, fallback="next-region")
         r = min(regs, key=lambda r: r.lam_min)
         s = tool.synthesize(component, unrolls=r.mu_max, ports=r.ports,
                             max_states=(r.facts.h(r.mu_max, r.ports)
-                                        if r.facts and r.facts.has_plm_access else None))
+                                        if r.facts and r.facts.has_plm_access else None),
+                            tile=r.tile)
         return MapOutcome(component, s, r, lam_target, fallback="fastest")
 
     # 2. Amdahl inverse inside the region
@@ -98,7 +131,8 @@ def map_target(tool: OracleLedger, component: str,
         cap = None
         if region.facts is not None and region.facts.has_plm_access:
             cap = region.facts.h(mu_try, region.ports)
-        s = tool.synthesize(component, unrolls=mu_try, ports=region.ports, max_states=cap)
+        s = tool.synthesize(component, unrolls=mu_try, ports=region.ports,
+                            max_states=cap, tile=region.tile)
         if s.feasible:
             last = s
             if s.lam <= lam_target * (1.0 + 1e-9):
@@ -115,9 +149,11 @@ def map_target(tool: OracleLedger, component: str,
     faster = [r for r in regs if r.lam_max < lam_target]
     if faster:
         r = max(faster, key=lambda r: r.lam_max)
-        s = tool.synthesize(component, unrolls=r.mu_min, ports=r.ports)
+        s = tool.synthesize(component, unrolls=r.mu_min, ports=r.ports,
+                            tile=r.tile)
         return MapOutcome(component, s, r, lam_target, fallback="next-region")
     r = min(regs, key=lambda r: r.lam_min)
     cap = r.facts.h(r.mu_max, r.ports) if r.facts and r.facts.has_plm_access else None
-    s = tool.synthesize(component, unrolls=r.mu_max, ports=r.ports, max_states=cap)
+    s = tool.synthesize(component, unrolls=r.mu_max, ports=r.ports,
+                        max_states=cap, tile=r.tile)
     return MapOutcome(component, s, r, lam_target, fallback="fastest")

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Sequence
 
 __all__ = ["PLMSpec", "PLM", "MemGen"]
 
@@ -46,12 +47,17 @@ class PLM:
     words_per_bank: int
     area: float                     # mm^2
     ports: int
+    word_bits: int = 32             # macro word width
+    clients: int = 1                # components time-multiplexed onto it
 
     @property
     def bits(self) -> int:
-        return self.banks * self.words_per_bank * 0  # placeholder; see total_bits
+        """Physical storage bits of the generated architecture."""
+        return self.banks * self.words_per_bank * self.word_bits
 
     def total_bits(self, word_bits: int) -> int:
+        """Storage bits at an explicit word width (pre-dates the stored
+        ``word_bits``; equals ``bits`` when the widths agree)."""
         return self.banks * self.words_per_bank * word_bits
 
 
@@ -60,7 +66,8 @@ class MemGen:
 
     def generate(self, spec: PLMSpec) -> PLM:
         if spec.words <= 0:
-            return PLM(banks=0, words_per_bank=0, area=0.0, ports=spec.ports)
+            return PLM(banks=0, words_per_bank=0, area=0.0, ports=spec.ports,
+                       word_bits=spec.word_bits)
         # Ports must be servable in one cycle: with dual-ported macros,
         # ceil(ports/2) banks minimum; round banks to a power of two so
         # the bank-select logic avoids Euclidean division (Section 5,
@@ -74,4 +81,28 @@ class MemGen:
         area_macros = banks * (_MACRO_OVERHEAD_MM2 + bits * _CELL_AREA_MM2_PER_BIT * eff)
         area_mux = spec.ports * banks * _MUX_AREA_PER_PORT_BANK
         return PLM(banks=banks, words_per_bank=words_per_bank,
-                   area=area_macros + area_mux, ports=spec.ports)
+                   area=area_macros + area_mux, ports=spec.ports,
+                   word_bits=spec.word_bits)
+
+    def generate_shared(self, specs: Sequence[PLMSpec]) -> PLM:
+        """One physical PLM serving several *mutually exclusive* clients.
+
+        Only one client accesses the memory at a time (the planner's
+        compatibility certificate), so the shared architecture needs the
+        envelope of the requirements — max capacity, max word width, max
+        port count — not their sum; Mnemosyne's address-space sharing
+        (paper refs [36, 37]) exploits exactly this.  Each client beyond
+        the first pays an arbitration slice per port-bank pair (the
+        client-select crossbar layer in front of the bank mux).
+        """
+        if not specs:
+            raise ValueError("generate_shared needs at least one PLMSpec")
+        env = PLMSpec(words=max(s.words for s in specs),
+                      word_bits=max(s.word_bits for s in specs),
+                      ports=max(s.ports for s in specs))
+        plm = self.generate(env)
+        arb = ((len(specs) - 1) * env.ports * max(1, plm.banks)
+               * _MUX_AREA_PER_PORT_BANK)
+        return PLM(banks=plm.banks, words_per_bank=plm.words_per_bank,
+                   area=plm.area + arb, ports=plm.ports,
+                   word_bits=plm.word_bits, clients=len(specs))

@@ -46,10 +46,28 @@ __all__ = [
     "PersistentOracleCache",
     "OracleLedger",
     "CountingTool",
+    "call_synthesize",
 ]
 
-# key type used everywhere below: (component, unrolls, ports, max_states)
-Key = Tuple[str, int, int, Optional[int]]
+
+def call_synthesize(tool, component: str, *, unrolls: int, ports: int,
+                    max_states: Optional[int] = None,
+                    tile: int = 0) -> Synthesis:
+    """Invoke ``tool.synthesize`` forwarding ``tile`` only when set.
+
+    The single place that encodes the compatibility rule for the tile
+    knob: two-knob backends (and pre-tile user tools) never see the
+    keyword, so they keep working unchanged.
+    """
+    if tile:
+        return tool.synthesize(component, unrolls=unrolls, ports=ports,
+                               max_states=max_states, tile=tile)
+    return tool.synthesize(component, unrolls=unrolls, ports=ports,
+                           max_states=max_states)
+
+# key type used everywhere below:
+# (component, unrolls, ports, max_states, tile); tile 0 = native tile
+Key = Tuple[str, int, int, Optional[int], int]
 
 
 @dataclass(frozen=True)
@@ -58,17 +76,21 @@ class InvocationRequest:
 
     ``max_states`` carries the lambda-constraint of Algorithm 1 (the
     synthesis fails when the scheduler cannot fit an iteration within
-    that many states); ``None`` means unconstrained.
+    that many states); ``None`` means unconstrained.  ``tile`` is the
+    third knob axis (PLM tile edge); 0 means the component's native
+    tile, and is the only value two-knob backends ever see.
     """
 
     component: str
     unrolls: int
     ports: int
     max_states: Optional[int] = None
+    tile: int = 0
 
     @property
     def key(self) -> Key:
-        return (self.component, self.unrolls, self.ports, self.max_states)
+        return (self.component, self.unrolls, self.ports, self.max_states,
+                self.tile)
 
 
 @dataclass(frozen=True)
@@ -89,6 +111,7 @@ class InvocationRecord:
     area: float
     phase: str = ""
     wall_s: float = 0.0
+    tile: int = 0
 
 
 @runtime_checkable
@@ -121,9 +144,11 @@ class OracleBatchMixin:
     batch_workers: int = 8
 
     def evaluate(self, request: InvocationRequest) -> Synthesis:
-        return self.synthesize(request.component, unrolls=request.unrolls,
+        return call_synthesize(self, request.component,
+                               unrolls=request.unrolls,
                                ports=request.ports,
-                               max_states=request.max_states)
+                               max_states=request.max_states,
+                               tile=request.tile)
 
     def evaluate_batch(self, requests: Sequence[InvocationRequest],
                        *, workers: Optional[int] = None) -> List[Synthesis]:
@@ -149,13 +174,15 @@ class OracleCache(Protocol):
 def _synth_to_json(s: Synthesis) -> Dict[str, Any]:
     return {"lam": s.lam, "area": s.area, "ports": s.ports,
             "unrolls": s.unrolls, "states": s.states_per_iter,
-            "feasible": s.feasible, "detail": dict(s.detail)}
+            "feasible": s.feasible, "detail": dict(s.detail),
+            "tile": s.tile}
 
 
 def _synth_from_json(d: Dict[str, Any]) -> Synthesis:
     return Synthesis(lam=d["lam"], area=d["area"], ports=d["ports"],
                      unrolls=d["unrolls"], states_per_iter=d["states"],
-                     feasible=d["feasible"], detail=dict(d["detail"]))
+                     feasible=d["feasible"], detail=dict(d["detail"]),
+                     tile=d.get("tile", 0))
 
 
 class PersistentOracleCache:
@@ -196,9 +223,12 @@ class PersistentOracleCache:
         _, extra = store.restore(self.root, step,
                                  {"n_entries": np.asarray(0)})
         for rec in extra.get("entries", []):
-            comp, unrolls, ports, max_states = rec["key"]
+            # pre-tile caches persisted 4-element keys; they reload as
+            # native-tile (tile=0) points
+            comp, unrolls, ports, max_states, *rest = rec["key"]
+            tile = int(rest[0]) if rest else 0
             key = (comp, int(unrolls), int(ports),
-                   None if max_states is None else int(max_states))
+                   None if max_states is None else int(max_states), tile)
             self._entries[key] = _synth_from_json(rec["synth"])
 
     def flush(self) -> None:
@@ -285,15 +315,17 @@ class OracleLedger:
                 self.records.append(InvocationRecord(
                     component=comp, unrolls=key[1], ports=key[2],
                     max_states=key[3], feasible=synth.feasible,
-                    lam=synth.lam, area=synth.area, phase="restored"))
+                    lam=synth.lam, area=synth.area, phase="restored",
+                    tile=key[4] if len(key) > 4 else 0))
 
     # ------------------------------------------------------------------
     def _call_tool(self, req: InvocationRequest) -> Synthesis:
         tool = self.tool
         if hasattr(tool, "synthesize"):
-            return tool.synthesize(req.component, unrolls=req.unrolls,
-                                   ports=req.ports,
-                                   max_states=req.max_states)
+            return call_synthesize(tool, req.component,
+                                   unrolls=req.unrolls, ports=req.ports,
+                                   max_states=req.max_states,
+                                   tile=req.tile)
         return tool.evaluate(req)
 
     def evaluate(self, request: InvocationRequest) -> Synthesis:
@@ -342,7 +374,8 @@ class OracleLedger:
                 component=request.component, unrolls=request.unrolls,
                 ports=request.ports, max_states=request.max_states,
                 feasible=out.feasible, lam=out.lam, area=out.area,
-                phase=self.phase, wall_s=time.monotonic() - t0))
+                phase=self.phase, wall_s=time.monotonic() - t0,
+                tile=request.tile))
             self._inflight.pop(key, None)
         ev.set()
         if self._persist is not None:
@@ -368,13 +401,20 @@ class OracleLedger:
     # Legacy CountingTool surface (the whole seed engine drives this)
     # ------------------------------------------------------------------
     def synthesize(self, component: str, *, unrolls: int, ports: int,
-                   max_states: Optional[int] = None) -> Synthesis:
+                   max_states: Optional[int] = None,
+                   tile: int = 0) -> Synthesis:
         return self.evaluate(InvocationRequest(
             component=component, unrolls=unrolls, ports=ports,
-            max_states=max_states))
+            max_states=max_states, tile=tile))
 
     def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts:
         return self.tool.cdfg_facts(component, synth)
+
+    def plm_requirement(self, component: str, synth: Synthesis):
+        """Delegate PLM-requirement extraction (core.plm) to the backend;
+        returns None for backends that do not expose one."""
+        fn = getattr(self.tool, "plm_requirement", None)
+        return None if fn is None else fn(component, synth)
 
     def total(self, component: Optional[str] = None) -> int:
         if component is not None:

@@ -39,7 +39,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from .knobs import CDFGFacts, Synthesis, SynthesisTool
-from .oracle import OracleBatchMixin
+from .oracle import OracleBatchMixin, call_synthesize
 
 __all__ = [
     "PallasKernelSpec",
@@ -100,22 +100,35 @@ class MeasurementStore:
     feasibility) are recomputed by the oracle on replay, so a recording
     survives cost-model refinements.  ``save`` writes sorted keys —
     re-recording an identical machine state diffs clean.
+
+    ``flush_every`` > 0 makes the store durable *incrementally*: every
+    N-th ``put`` rewrites the file through the same atomic
+    write-then-rename step the :class:`PersistentOracleCache` uses, so a
+    killed recording campaign loses at most the last N-1 timings and a
+    restart (the record-mode oracle consults the store before timing)
+    never re-pays for a flushed point.  0 keeps the legacy behaviour:
+    the file is only written on an explicit ``save``/oracle ``flush``.
     """
 
     def __init__(self, path: Optional[str] = None,
-                 meta: Optional[Dict[str, Any]] = None):
+                 meta: Optional[Dict[str, Any]] = None,
+                 flush_every: int = 0):
         self.path = path
         self.meta: Dict[str, Any] = dict(meta or {})
         self.entries: Dict[MeasureKey, float] = {}
+        self.flush_every = max(0, int(flush_every))
+        self._dirty = 0
+        self._save_lock = threading.Lock()
 
     @classmethod
-    def load(cls, path: str) -> "MeasurementStore":
+    def load(cls, path: str, *, flush_every: int = 0) -> "MeasurementStore":
         with open(path) as f:
             doc = json.load(f)
         if doc.get("version") != 1:
             raise ValueError(f"unknown measurement-store version "
                              f"{doc.get('version')!r} in {path}")
-        store = cls(path=path, meta=doc.get("meta", {}))
+        store = cls(path=path, meta=doc.get("meta", {}),
+                    flush_every=flush_every)
         for k, wall_s in doc["entries"].items():
             comp, p, u = k.rsplit(":", 2)
             store.entries[(comp, int(p[1:]), int(u[1:]))] = float(wall_s)
@@ -130,12 +143,25 @@ class MeasurementStore:
         return self.entries.get(key)
 
     def put(self, key: MeasureKey, wall_s: float) -> None:
-        self.entries[key] = float(wall_s)
+        if self.flush_every:
+            # the write happens under the save lock so a concurrent
+            # autoflush never iterates a mutating dict
+            with self._save_lock:
+                self.entries[key] = float(wall_s)
+                self._dirty += 1
+                if self._dirty >= self.flush_every and self.path:
+                    self._save_locked(self.path)
+        else:
+            self.entries[key] = float(wall_s)
 
     def save(self, path: Optional[str] = None) -> str:
         path = path or self.path
         if path is None:
             raise ValueError("MeasurementStore has no path")
+        with self._save_lock:
+            return self._save_locked(path)
+
+    def _save_locked(self, path: str) -> str:
         doc = {"version": 1, "meta": self.meta,
                "entries": {self._key_str(k): self.entries[k]
                            for k in sorted(self.entries)}}
@@ -144,8 +170,9 @@ class MeasurementStore:
         with open(tmp, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
             f.write("\n")
-        os.replace(tmp, path)
+        os.replace(tmp, path)     # atomic: a kill leaves old or new, never torn
         self.path = path
+        self._dirty = 0
         return path
 
     def __len__(self) -> int:
@@ -168,6 +195,21 @@ class PallasOracle(OracleBatchMixin):
     -> seconds`` replaces the wall-clock measurement — tests inject a
     deterministic one to make a *fresh* drive byte-comparable to a
     replayed one.
+
+    ``native_tile`` declares the PLM tile the kernel specs (and the
+    recording) were built at.  A synthesis requested at any other tile
+    is routed to the fallback tool, which re-prices the component at
+    that tile analytically — the recording stays single-tile, the tile
+    knob axis still explores (pair with a unit-calibrated fallback,
+    :mod:`repro.core.plm.units`, to keep the axes comparable).
+
+    ``missing`` picks the replay behaviour for a point absent from the
+    recording: ``"error"`` (default) raises
+    :class:`MissingMeasurementError` — the strict CI semantics;
+    ``"fallback"`` prices it through the fallback tool instead, which is
+    what a drive whose walk *extends* the recorded one (e.g. the tile
+    knob reshapes the LP and hence the mapped unroll choices) needs to
+    stay deterministic and machine-free.
     """
 
     def __init__(self, components: Dict[str, PallasKernelSpec], *,
@@ -178,9 +220,15 @@ class PallasOracle(OracleBatchMixin):
                  vmem_budget: int = _VMEM_BUDGET,
                  bank_overhead_bytes: int = 4096,
                  reps: int = 3,
+                 native_tile: int = 0,
+                 missing: str = "error",
                  timer: Optional[Callable[..., float]] = None):
         if mode not in ("measure", "record", "replay"):
             raise ValueError(f"unknown mode {mode!r}")
+        if missing not in ("error", "fallback"):
+            raise ValueError(f"unknown missing policy {missing!r}")
+        if missing == "fallback" and fallback is None:
+            raise ValueError("missing='fallback' requires a fallback tool")
         if mode in ("record", "replay") and store is None:
             raise ValueError(f"mode={mode!r} requires a MeasurementStore")
         self.components = dict(components)
@@ -191,6 +239,8 @@ class PallasOracle(OracleBatchMixin):
         self.vmem_budget = int(vmem_budget)
         self.bank_overhead_bytes = int(bank_overhead_bytes)
         self.reps = max(1, int(reps))
+        self.native_tile = int(native_tile)
+        self.missing = missing
         self.timer = timer
         self._measured: Dict[MeasureKey, float] = {}
         self._lock = threading.Lock()
@@ -227,6 +277,10 @@ class PallasOracle(OracleBatchMixin):
                 raise MissingMeasurementError(
                     f"no recorded measurement for {key}; re-record with "
                     f"`python examples/wami_pallas.py --record`")
+        elif self.mode == "record" and self.store.get(key) is not None:
+            # resumed campaign: the point was already paid for (and
+            # flushed) by the killed run — never re-time it
+            wall = self.store.get(key)
         else:
             with self._measure_lock:
                 with self._lock:              # raced while waiting?
@@ -244,8 +298,8 @@ class PallasOracle(OracleBatchMixin):
             # a racing measurement of the same key keeps the first value,
             # so every consumer sees one number per physical point
             wall = self._measured.setdefault(key, wall)
-            if self.mode == "record":
-                self.store.put(key, wall)
+            if self.mode == "record" and self.store.get(key) != wall:
+                self.store.put(key, wall)    # may autoflush (flush_every)
         return wall
 
     # ------------------------------------------------------------------
@@ -259,37 +313,64 @@ class PallasOracle(OracleBatchMixin):
         # per-bank pipeline overhead (descriptors, semaphores)
         return float(2 * step * ports + self.bank_overhead_bytes * ports)
 
-    def _infeasible(self, ports: int, unrolls: int, states: int) -> Synthesis:
+    def _infeasible(self, ports: int, unrolls: int, states: int,
+                    tile: int = 0) -> Synthesis:
         return Synthesis(lam=float("inf"), area=float("inf"), ports=ports,
                          unrolls=unrolls, states_per_iter=states,
-                         feasible=False)
+                         feasible=False, tile=tile)
 
     # ------------------------------------------------------------------
     # SynthesisTool protocol
     # ------------------------------------------------------------------
+    def _route_fallback(self, component: str, tile: int) -> bool:
+        """True when (component, tile) is priced by the fallback tool:
+        the component has no kernel, or the tile is not the recording's."""
+        if component not in self.components:
+            return True
+        return bool(tile and self.native_tile
+                    and tile != self.native_tile)
+
     def synthesize(self, component: str, *, unrolls: int, ports: int,
-                   max_states: Optional[int] = None) -> Synthesis:
-        spec = self.components.get(component)
-        if spec is None:
+                   max_states: Optional[int] = None,
+                   tile: int = 0) -> Synthesis:
+        if (tile and not self.native_tile
+                and component in self.components):
+            # without a declared native tile the oracle cannot tell
+            # whether the request matches the kernels/recording — pricing
+            # it anyway would fabricate a tile axis out of one tile's
+            # measurements (and collide store keys in record mode)
+            raise ValueError(
+                f"tile={tile} requested for {component!r} but this "
+                f"PallasOracle declares no native_tile; pass native_tile= "
+                f"so tile routing is defined")
+        if self._route_fallback(component, tile):
             if self.fallback is None:
                 raise KeyError(f"no Pallas kernel or fallback tool for "
-                               f"component {component!r}")
-            return self.fallback.synthesize(component, unrolls=unrolls,
-                                            ports=ports,
-                                            max_states=max_states)
+                               f"component {component!r} (tile={tile})")
+            return call_synthesize(self.fallback, component,
+                                   unrolls=unrolls, ports=ports,
+                                   max_states=max_states, tile=tile)
+        spec = self.components[component]
         if not spec.divisible(ports, unrolls):
-            return self._infeasible(ports, unrolls, 0)
+            return self._infeasible(ports, unrolls, 0, tile)
         states = spec.states(ports, unrolls)
         if max_states is not None and states > max_states:
-            return self._infeasible(ports, unrolls, states)
+            return self._infeasible(ports, unrolls, states, tile)
         H, W = spec.shape
         step = spec.vmem_bytes(H, W, ports=ports, unrolls=unrolls)
         if 2 * step > self.vmem_budget:
             # the TPU lambda-constraint: the double-buffered block no
             # longer fits VMEM — discarded, and counted, like any other
             # failed synthesis
-            return self._infeasible(ports, unrolls, states)
-        wall = self._wall_s(spec, ports, unrolls)
+            return self._infeasible(ports, unrolls, states, tile)
+        try:
+            wall = self._wall_s(spec, ports, unrolls)
+        except MissingMeasurementError:
+            if self.missing != "fallback":
+                raise
+            return call_synthesize(self.fallback, component,
+                                   unrolls=unrolls, ports=ports,
+                                   max_states=max_states, tile=tile)
         lam = wall / ports                       # parallel lane-banks
         area = self._area_bytes(spec, ports, unrolls)
         return Synthesis(
@@ -297,15 +378,39 @@ class PallasOracle(OracleBatchMixin):
             states_per_iter=states, feasible=True,
             detail={"wall_s": wall, "vmem_step_bytes": float(step),
                     "grid_steps": float(spec.grid_steps(
-                        H, W, ports=ports, unrolls=unrolls))})
+                        H, W, ports=ports, unrolls=unrolls))},
+            tile=tile)
 
     def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts:
-        spec = self.components.get(component)
-        if spec is None:
+        # a feasible native-tile synthesis without a measured wall came
+        # from the missing="fallback" path: its Eq. (1) facts must match
+        # the model that actually scheduled it, or the derived caps get
+        # applied across two different state models
+        fallback_priced = (self.missing == "fallback" and synth.feasible
+                           and "wall_s" not in (synth.detail or {}))
+        if self._route_fallback(component, synth.tile) or fallback_priced:
             if self.fallback is None:
                 raise KeyError(component)
             return self.fallback.cdfg_facts(component, synth)
-        return spec.facts()
+        return self.components[component].facts()
+
+    def plm_requirement(self, component: str, synth: Synthesis):
+        """The measured component's memory demand: its entire area IS
+        VMEM footprint (the TPU shadow of the PLM), so capacity = area
+        bytes and the datapath share is zero.  Fallback-priced points
+        delegate to the fallback tool — including native-tile points the
+        ``missing="fallback"`` policy priced analytically, recognizable
+        by the absence of the measured ``wall_s`` detail."""
+        from .plm.spec import PLMRequirement      # lazy: avoid cycles
+        if (self._route_fallback(component, synth.tile)
+                or "wall_s" not in (synth.detail or {})):
+            fn = getattr(self.fallback, "plm_requirement", None)
+            return None if fn is None else fn(component, synth)
+        area = float(synth.area)
+        return PLMRequirement(component=component, capacity=int(area),
+                              word_bits=32, ports=synth.ports,
+                              area_plm=area, area_logic=0.0,
+                              unit="bytes", tile=synth.tile)
 
     # ------------------------------------------------------------------
     def flush(self) -> Optional[str]:

@@ -1,0 +1,32 @@
+"""System-level PLM planning: memory as a first-class DSE axis.
+
+The subsystem the paper's memory-coordination story needs end to end:
+
+  * :mod:`.spec`    — requirements, groups, and memory plans;
+  * :mod:`.compat`  — the TMG one-token-cycle non-concurrency
+    certificate (which components may share banks);
+  * :mod:`.planner` — the deterministic greedy shared-bank planner whose
+    benefit guard makes the planned system cost pointwise no worse than
+    the paper's per-component sum;
+  * :mod:`.units`   — fitted exchange rates (latency scales + one global
+    area scale) so mixed measured+analytical systems price in one unit.
+
+Entry points: hang a :class:`PLMPlanner` on an
+:class:`~repro.core.session.ExplorationSession` (``memory_planner=``),
+or run ``benchmarks/fig10_pareto.py --share-plm`` /
+``examples/wami_plm.py`` for the WAMI walkthrough (docs/memory.md).
+"""
+
+from .compat import MemoryCompatGraph, exclusive_pairs
+from .planner import PLMPlanner, shared_area
+from .spec import (MemoryGroup, MemoryPlan, PLMRequirement,
+                   requirement_from_synthesis)
+from .units import UnitSystem, fit_unit_system, vmem_area_bytes
+
+__all__ = [
+    "PLMRequirement", "MemoryGroup", "MemoryPlan",
+    "requirement_from_synthesis",
+    "MemoryCompatGraph", "exclusive_pairs",
+    "PLMPlanner", "shared_area",
+    "UnitSystem", "fit_unit_system", "vmem_area_bytes",
+]

@@ -1,0 +1,76 @@
+"""Memory compatibility graph: which components may share a PLM.
+
+Two components can share physical memory banks only if they never
+execute concurrently.  For a timed marked graph that has a clean
+structural certificate: the token count of every directed cycle is an
+invariant of the firing rule, and a transition holds its cycle's tokens
+for the whole firing (it consumes from the cycle at start and produces
+back at end).  Hence
+
+    **every pair of distinct transitions on a common cycle whose total
+    initial marking is exactly one token is mutually exclusive** —
+    while one fires the cycle holds zero free tokens, so the other
+    cannot start.
+
+On the WAMI TMG (Fig. 8) this certifies precisely the Lucas-Kanade
+refinement loop: ``alg:matrix_resh->warp`` carries one token and the
+forward edges carry none, so warp, matrix_sub, sd_update, matrix_mul,
+matrix_add and matrix_resh serialize per LK iteration and their PLMs
+may be one shared multi-bank memory.  Streaming neighbours connected
+through multi-token ping-pong channels (debayer/grayscale, ...) stay
+concurrent and keep private PLMs.
+
+The sharing model assumes a stage's PLM holds live data only during its
+own load-compute-store window (Fig. 3) — contents are handed over via
+TLM channels, not retained between firings — which is the same
+assumption Mnemosyne's "address-space compatibility" sharing makes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, List, Set, Tuple
+
+from ..tmg import TMG
+
+__all__ = ["exclusive_pairs", "MemoryCompatGraph"]
+
+
+def exclusive_pairs(tmg: TMG) -> FrozenSet[FrozenSet[str]]:
+    """All unordered transition pairs certified mutually exclusive by a
+    one-token cycle.  Deterministic: derived purely from the marking."""
+    pairs: Set[FrozenSet[str]] = set()
+    for cyc in tmg.simple_cycles():
+        if sum(p.tokens for p in cyc) != 1:
+            continue
+        names = sorted({p.src for p in cyc})
+        for i, u in enumerate(names):
+            for v in names[i + 1:]:
+                pairs.add(frozenset((u, v)))
+    return frozenset(pairs)
+
+
+class MemoryCompatGraph:
+    """Adjacency view over :func:`exclusive_pairs` for the planner.
+
+    ``may_share(u, v)`` is True when the TMG certifies u and v never
+    overlap in time.  The graph is static per TMG — build it once and
+    reuse it across every mapped design point.
+    """
+
+    def __init__(self, tmg: TMG):
+        self.names: List[str] = [t.name for t in tmg.transitions]
+        self._adj: Dict[str, Set[str]] = {n: set() for n in self.names}
+        for pair in exclusive_pairs(tmg):
+            u, v = sorted(pair)
+            self._adj[u].add(v)
+            self._adj[v].add(u)
+
+    def may_share(self, u: str, v: str) -> bool:
+        return u != v and v in self._adj.get(u, ())
+
+    def neighbours(self, u: str) -> Tuple[str, ...]:
+        return tuple(sorted(self._adj.get(u, ())))
+
+    def cliques_containing(self, members: Tuple[str, ...], cand: str) -> bool:
+        """True when ``cand`` is pairwise-compatible with every member."""
+        return all(self.may_share(m, cand) for m in members)

@@ -1,0 +1,89 @@
+"""One cost unit per system: exchange rates between backend area units.
+
+A mixed drive — PallasOracle pricing the measured components in VMEM
+bytes, an analytical fallback pricing the rest in mm² — used to sum the
+two straight into one "system cost" (ROADMAP: "One cost unit per
+system").  This module closes that hole: it fits, from a measurement
+recording alone, (a) the per-component latency scales the analytical
+model needs to sit on the measured latency axis and (b) ONE global area
+exchange rate (bytes per mm²).  A single multiplier cannot reorder the
+analytical backend's own areas, so per-backend dominance is preserved
+exactly (property-tested in tests/test_calibrate.py) while the system
+sum — and the PLM planner's cross-backend bank sharing — becomes
+unit-clean.
+
+Everything is computed from the store's *sorted* entries and an
+analytical model query per entry, with no kernel execution: the
+measured area is the oracle's own deterministic VMEM formula, so the
+fit is byte-reproducible on any machine holding the recording.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from ..calibrate import (CalibratedTool, CalibrationFit, fit_area_scale,
+                         fit_latency_scales)
+from ..knobs import SynthesisTool
+
+__all__ = ["UnitSystem", "fit_unit_system", "vmem_area_bytes"]
+
+
+def vmem_area_bytes(spec, ports: int, unrolls: int, *,
+                    bank_overhead_bytes: int = 4096) -> float:
+    """The PallasOracle area formula, standalone: double-buffered working
+    set over the parallel banks plus the per-bank pipeline overhead.
+    ``spec`` is any PallasKernelSpec-shaped object (duck-typed)."""
+    H, W = spec.shape
+    step = spec.vmem_bytes(H, W, ports=ports, unrolls=unrolls)
+    return float(2 * step * ports + bank_overhead_bytes * ports)
+
+
+@dataclass(frozen=True)
+class UnitSystem:
+    """The fitted exchange rates for one mixed-backend system."""
+
+    unit: str                       # the canonical cost unit ("bytes")
+    lam: CalibrationFit             # per-component latency scales
+    area_scale: float               # canonical-unit per model-unit
+    area_points: int
+    area_spread: float              # max/min residual ratio (1.0 = exact)
+
+    def calibrated(self, model: SynthesisTool) -> CalibratedTool:
+        """Wrap an analytical tool so it reports measured-axis latencies
+        and canonical-unit areas — the fallback a mixed system drive
+        (and the PLM planner) can consume directly."""
+        return CalibratedTool(model, self.lam, area_scale=self.area_scale,
+                              unit=self.unit)
+
+
+def fit_unit_system(store, components: Dict[str, object],
+                    model: SynthesisTool, *,
+                    bank_overhead_bytes: int = 4096) -> UnitSystem:
+    """Fit a :class:`UnitSystem` from a measurement recording.
+
+    ``store`` is a :class:`~repro.core.pallas_oracle.MeasurementStore`
+    (duck-typed: ``.entries`` maps (component, ports, unrolls) to wall
+    seconds); ``components`` maps component name to its
+    PallasKernelSpec.  For every recorded point the measured latency is
+    wall/ports (the oracle's lane-bank convention) and the measured area
+    is the oracle's VMEM formula; both fits skip points the analytical
+    model deems infeasible.
+    """
+    lam_pts = []
+    area_pts = []
+    for key in sorted(store.entries):
+        comp, ports, unrolls = key
+        spec = components.get(comp)
+        if spec is None or not spec.divisible(ports, unrolls):
+            continue
+        wall = store.entries[key]
+        lam_pts.append((comp, ports, unrolls, wall / ports))
+        area_pts.append((comp, ports, unrolls,
+                         vmem_area_bytes(spec, ports, unrolls,
+                                         bank_overhead_bytes=bank_overhead_bytes)))
+    lam_fit = fit_latency_scales(model, lam_pts)
+    scale, n, spread = fit_area_scale(model, area_pts)
+    return UnitSystem(unit="bytes", lam=lam_fit, area_scale=scale,
+                      area_points=n, area_spread=spread)

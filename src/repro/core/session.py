@@ -47,13 +47,23 @@ __all__ = ["SystemPoint", "CosmosResult", "ProgressEvent",
 
 @dataclass(frozen=True)
 class SystemPoint:
-    """A mapped system implementation (one point of Fig. 10)."""
+    """A mapped system implementation (one point of Fig. 10).
+
+    When the session carries a PLM planner, ``cost_actual`` is the
+    planned shared-memory system cost, ``cost_unshared`` keeps the
+    paper's naive per-component sum for comparison, and ``plm_groups``
+    records the shared-bank grouping (members of singleton groups are
+    omitted).  Without a planner ``cost_unshared`` is None and
+    ``cost_actual`` is the naive sum, exactly as before.
+    """
 
     theta_planned: float
     cost_planned: float
     theta_actual: float
     cost_actual: float
     outcomes: Tuple[MapOutcome, ...]
+    cost_unshared: Optional[float] = None
+    plm_groups: Tuple[Tuple[str, ...], ...] = ()
 
     @property
     def sigma_mismatch(self) -> float:
@@ -112,12 +122,14 @@ def _facts_from_json(d: Optional[Dict[str, Any]]) -> Optional[CDFGFacts]:
 def _region_to_json(r: Region) -> Dict[str, Any]:
     return {"ports": r.ports, "lam_max": r.lam_max, "area_min": r.area_min,
             "lam_min": r.lam_min, "area_max": r.area_max, "mu_min": r.mu_min,
-            "mu_max": r.mu_max, "facts": _facts_to_json(r.facts)}
+            "mu_max": r.mu_max, "facts": _facts_to_json(r.facts),
+            "tile": r.tile}
 
 
 def _region_from_json(d: Dict[str, Any]) -> Region:
     d = dict(d)
     d["facts"] = _facts_from_json(d["facts"])
+    d.setdefault("tile", 0)       # pre-tile session snapshots
     return Region(**d)
 
 
@@ -171,6 +183,10 @@ class ExplorationSession:
     reproduces the seed's sequential drive call-for-call).  ``fixed``
     maps software components (Matrix-Inv in Fig. 8) to their fixed
     effective latency — they join the TMG but are never synthesized.
+    ``memory_planner`` (a :class:`~repro.core.plm.planner.PLMPlanner`)
+    replaces the map phase's naive per-component cost sum with the
+    planned shared-PLM system cost; the naive sum is kept on every
+    :class:`SystemPoint` as ``cost_unshared``.
     """
 
     def __init__(self, tmg: TMG, tool, spaces: Dict[str, KnobSpace], *,
@@ -179,12 +195,14 @@ class ExplorationSession:
                  ledger: Optional[OracleLedger] = None,
                  cache: Optional[OracleCache] = None,
                  workers: int = 1,
+                 memory_planner=None,
                  on_event: Optional[Callable[[ProgressEvent], None]] = None):
         self.tmg = tmg
         self.spaces = dict(spaces)
         self.delta = float(delta)
         self.fixed = dict(fixed or {})
         self.workers = max(1, int(workers))
+        self.memory_planner = memory_planner
         self.on_event = on_event
         if ledger is not None:
             if cache is not None:
@@ -288,7 +306,7 @@ class ExplorationSession:
         def one(plan_pt: PlanPoint) -> SystemPoint:
             outcomes: List[MapOutcome] = []
             lam_actual: Dict[str, float] = {}
-            cost_actual = 0.0
+            cost_naive = 0.0
             for name in self._names():
                 if name in self.fixed:
                     lam_actual[name] = self.fixed[name]
@@ -298,8 +316,17 @@ class ExplorationSession:
                                  plan_pt.lam_targets[name])
                 outcomes.append(out)
                 lam_actual[name] = out.synthesis.lam
-                cost_actual += out.synthesis.area
+                cost_naive += out.synthesis.area
             theta_actual = self.tmg.throughput(lam_actual)
+            cost_actual, cost_unshared, groups = cost_naive, None, ()
+            if self.memory_planner is not None:
+                mem = self.memory_planner.plan_point(
+                    self.ledger, {o.component: o.synthesis
+                                  for o in outcomes})
+                cost_actual = mem.system_cost
+                cost_unshared = cost_naive
+                groups = tuple(g.members for g in mem.groups
+                               if len(g.members) > 1)
             with self._progress_lock:
                 done[0] += 1
                 n_done = done[0]
@@ -309,7 +336,9 @@ class ExplorationSession:
                                cost_planned=plan_pt.cost,
                                theta_actual=theta_actual,
                                cost_actual=cost_actual,
-                               outcomes=tuple(outcomes))
+                               outcomes=tuple(outcomes),
+                               cost_unshared=cost_unshared,
+                               plm_groups=groups)
 
         self.mapped = self._pool_map(one, planned)
         return self.mapped

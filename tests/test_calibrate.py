@@ -1,0 +1,158 @@
+"""core.calibrate coverage: latency-fit round-trips, the area exchange
+rate, and the dominance-preservation property of calibration."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CalibratedTool, DesignPoint, Synthesis,
+                        dominates_min_min, fit_area_scale,
+                        fit_latency_scales)
+from repro.core.hlsim import ComponentSpec, HLSTool, LoopNest
+
+
+def _hls(noise=0.0):
+    loop = LoopNest(trip=1024, gamma_r=4, gamma_w=2, arith_ops=16,
+                    dep_depth=4, live_values=8)
+    return HLSTool({"c": ComponentSpec("c", loop, words_in=4096,
+                                       words_out=4096)}, noise=noise)
+
+
+# ----------------------------------------------------------------------
+# latency fit
+# ----------------------------------------------------------------------
+def test_latency_fit_round_trip_exact():
+    """Measured = k * model at every point -> the fit recovers k exactly
+    and the calibrated tool reproduces the measurements."""
+    tool = _hls()
+    k = 3.7
+    pts = [(p, u) for p in (1, 2, 4) for u in (4, 8, 16)]
+    measured = [("c", p, u, k * tool.synthesize("c", unrolls=u,
+                                                ports=p).lam)
+                for p, u in pts]
+    fit = fit_latency_scales(tool, measured)
+    assert fit.scale("c") == pytest.approx(k, rel=1e-12)
+    assert fit.lam_spread["c"] == pytest.approx(1.0)
+    cal = CalibratedTool(tool, fit)
+    for (p, u), (_, _, _, lam) in zip(pts, measured):
+        assert cal.synthesize("c", unrolls=u, ports=p).lam == \
+            pytest.approx(lam, rel=1e-12)
+
+
+def test_latency_fit_uses_the_measured_points_tile():
+    """5-tuple measured points carry a tile: the fit must query the
+    model at that tile, not fold the tile ratio into the scale."""
+    from repro.core.hlsim import ComponentSpec, LoopNest
+    loop = LoopNest(trip=1024, gamma_r=4, gamma_w=2, arith_ops=16,
+                    dep_depth=4, live_values=8)
+    tool = HLSTool({"c": ComponentSpec("c", loop, words_in=4096,
+                                       words_out=4096, outer_repeats=16,
+                                       base_tile=32)}, noise=0.0)
+    k = 2.0
+    measured = [("c", p, u, k * tool.synthesize("c", unrolls=u, ports=p,
+                                                tile=t).lam, t)
+                for p in (1, 2) for u in (4, 8) for t in (32, 64)]
+    fit = fit_latency_scales(tool, measured)
+    assert fit.scale("c") == pytest.approx(k, rel=1e-12)
+    assert fit.lam_spread["c"] == pytest.approx(1.0)   # no tile leakage
+
+
+def test_latency_fit_order_independent():
+    tool = _hls()
+    measured = [("c", p, u, 1e-3 * u * (1 + 0.1 * p))
+                for p in (1, 2, 4) for u in (4, 8, 16)]
+    f1 = fit_latency_scales(tool, measured)
+    f2 = fit_latency_scales(tool, list(reversed(measured)))
+    assert f1.scales == f2.scales          # bitwise: sorted log sum
+
+
+# ----------------------------------------------------------------------
+# area fit
+# ----------------------------------------------------------------------
+def test_area_scale_round_trip():
+    tool = _hls()
+    k = 7.5e4                              # "bytes per mm2"
+    measured = [("c", p, u, k * tool.synthesize("c", unrolls=u,
+                                                ports=p).area)
+                for p in (1, 2, 4) for u in (4, 8)]
+    scale, n, spread = fit_area_scale(tool, measured)
+    assert scale == pytest.approx(k, rel=1e-12)
+    assert n == 6 and spread == pytest.approx(1.0)
+
+
+def test_area_scale_skips_bad_points():
+    tool = _hls()
+    good = 2.0 * tool.synthesize("c", unrolls=4, ports=2).area
+    scale, n, _ = fit_area_scale(tool, [("c", 2, 4, float("inf")),
+                                        ("c", 2, 4, -5.0),
+                                        ("c", 2, 4, good)])
+    assert n == 1 and scale == pytest.approx(2.0)
+    assert fit_area_scale(tool, []) == (1.0, 0, 1.0)
+
+
+def test_calibrated_tool_scales_area_and_detail():
+    tool = _hls()
+    fit = fit_latency_scales(tool, [])
+    cal = CalibratedTool(tool, fit, area_scale=1e4, unit="bytes")
+    raw = tool.synthesize("c", unrolls=4, ports=2)
+    s = cal.synthesize("c", unrolls=4, ports=2)
+    assert s.area == pytest.approx(raw.area * 1e4)
+    assert s.detail["area_plm"] == pytest.approx(
+        raw.detail["area_plm"] * 1e4)
+    assert s.detail["area_logic"] == pytest.approx(
+        raw.detail["area_logic"] * 1e4)
+    req = cal.plm_requirement("c", s)
+    assert req.unit == "bytes"
+    assert req.area_plm == pytest.approx(s.detail["area_plm"])
+    assert req.area_plm + req.area_logic == pytest.approx(s.area)
+
+
+# ----------------------------------------------------------------------
+# property: calibration never reorders dominance within one backend
+# ----------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(st.floats(min_value=1e-6, max_value=1e6),
+       st.floats(min_value=1e-6, max_value=1e6),
+       st.lists(st.tuples(st.floats(min_value=1e-9, max_value=1e3),
+                          st.floats(min_value=1e-9, max_value=1e3)),
+                min_size=2, max_size=12))
+def test_calibration_preserves_dominance_order(k_lam, k_area, raw_points):
+    """Scaling every latency by one positive constant and every area by
+    another is a monotone map on both axes, so min-min dominance between
+    any two points of a single backend is invariant — the guarantee that
+    lets mixed fronts use fitted exchange rates without corrupting
+    per-backend Pareto structure."""
+    pts = [DesignPoint(perf=lam, cost=area) for lam, area in raw_points]
+    scaled = [DesignPoint(perf=lam * k_lam, cost=area * k_area)
+              for lam, area in raw_points]
+    for i, a in enumerate(pts):
+        for j, b in enumerate(pts):
+            if i == j:
+                continue
+            assert dominates_min_min(a, b) == \
+                dominates_min_min(scaled[i], scaled[j])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(min_value=0.1, max_value=10.0),
+       st.floats(min_value=0.1, max_value=10.0))
+def test_calibrated_hlstool_preserves_dominance(k_lam, k_area):
+    """Same property through the real CalibratedTool on real syntheses."""
+    tool = _hls()
+    fit = fit_latency_scales(
+        tool, [("c", p, u, k_lam * tool.synthesize("c", unrolls=u,
+                                                   ports=p).lam)
+               for p in (1, 2) for u in (2, 4)])
+    cal = CalibratedTool(tool, fit, area_scale=k_area)
+    knobs = [(p, u) for p in (1, 2, 4) for u in (4, 8)]
+    raw = [tool.synthesize("c", unrolls=u, ports=p) for p, u in knobs]
+    cald = [cal.synthesize("c", unrolls=u, ports=p) for p, u in knobs]
+
+    def dp(s):
+        return DesignPoint(perf=s.lam, cost=s.area)
+
+    for i in range(len(knobs)):
+        for j in range(len(knobs)):
+            if i == j:
+                continue
+            assert dominates_min_min(dp(raw[i]), dp(raw[j])) == \
+                dominates_min_min(dp(cald[i]), dp(cald[j]))

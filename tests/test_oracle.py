@@ -189,3 +189,41 @@ def test_persistent_cache_partial_resume(tmp_path):
     assert t_res.calls < t_ref.calls      # resumed run paid less
     assert repr(ref.mapped) == repr(res.mapped)
     assert ref.invocations == res.invocations
+
+
+def test_persistent_cache_tile_keys_and_legacy_records(tmp_path):
+    """Tile-differentiated points persist under 5-element keys, and a
+    pre-tile cache (4-element keys) reloads as native-tile points."""
+    import json
+
+    import numpy as np
+
+    from repro.checkpoint import store as ckpt
+
+    specs = _specs()
+    loop = LoopNest(256, 2, 1, 8, 3, 6)
+    specs["t"] = ComponentSpec("t", loop, 1024, 1024, outer_repeats=4,
+                               base_tile=32)
+    root = os.path.join(tmp_path, "cache")
+    led = OracleLedger(SpyTool(dict(specs)),
+                       cache=PersistentOracleCache(root, flush_every=1))
+    s32 = led.synthesize("t", unrolls=4, ports=2, tile=32)
+    s64 = led.synthesize("t", unrolls=4, ports=2, tile=64)
+    assert s32.area != s64.area
+
+    led2 = OracleLedger(SpyTool(dict(specs)),
+                        cache=PersistentOracleCache(root))
+    assert led2.synthesize("t", unrolls=4, ports=2, tile=64).area == s64.area
+    assert led2.total("t") == 2            # both tile points reconstructed
+
+    # hand-build a legacy (4-key) cache record and reload it
+    legacy_root = os.path.join(tmp_path, "legacy")
+    entry = {"key": ["t", 4, 2, None],
+             "synth": {"lam": 1.0, "area": 2.0, "ports": 2, "unrolls": 4,
+                       "states": 3, "feasible": True, "detail": {}}}
+    ckpt.save(legacy_root, 1, {"n_entries": np.asarray(1)},
+              extra={"entries": [entry]})
+    cache = PersistentOracleCache(legacy_root)
+    (key, synth), = cache.entries().items()
+    assert key == ("t", 4, 2, None, 0)     # tile=0: native
+    assert synth.area == 2.0 and synth.tile == 0

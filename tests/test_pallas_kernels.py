@@ -1,10 +1,18 @@
 """Interpret-mode parity: every WAMI stage kernel == its jnp oracle
 across the (ports x unrolls) knob grid (the PallasOracle's functional
-check — DESIGN.md §2)."""
+check — DESIGN.md §2).
+
+Marked ``slow``: interpret-mode compiles dominate the suite's wall
+clock, so CI runs this module in its own lane (`-m slow`) next to the
+kernel smoke gate; the tier-1 fast lane skips it with `-m "not slow"`.
+A plain `pytest` run still executes everything.
+"""
 
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.kernels.wami_change_det import (change_detection,
                                            change_detection_oracle)

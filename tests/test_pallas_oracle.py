@@ -101,6 +101,49 @@ def test_replay_is_byte_identical_to_fresh_record(tmp_path):
         == [(m.theta_actual, m.cost_actual) for m in r2.mapped]
 
 
+def test_record_resumes_without_retiming_paid_points(tmp_path):
+    """A killed recording campaign (autoflushed, never flush()ed) must
+    resume from the flushed file and never re-time a paid point."""
+    sub, _ = _small()
+    path = str(tmp_path / "m.json")
+    calls = []
+
+    def counting_timer(name, ports, unrolls, runner):
+        calls.append((name, ports, unrolls))
+        return _fake_timer(name, ports, unrolls, runner)
+
+    first = PallasOracle(sub, mode="record",
+                         store=MeasurementStore(path, flush_every=1),
+                         timer=counting_timer)
+    first.synthesize("gradient", unrolls=4, ports=2)
+    first.synthesize("gradient", unrolls=8, ports=2)
+    first.synthesize("grayscale", unrolls=4, ports=1)
+    assert len(calls) == 3
+    # simulated kill: no flush() — the autoflush already persisted all 3
+    resumed_store = MeasurementStore.load(path, flush_every=1)
+    assert len(resumed_store) == 3
+
+    second = PallasOracle(sub, mode="record", store=resumed_store,
+                          timer=counting_timer)
+    s = second.synthesize("gradient", unrolls=4, ports=2)    # paid already
+    assert s.feasible and len(calls) == 3                    # not re-timed
+    second.synthesize("gradient", unrolls=16, ports=2)       # new point
+    assert len(calls) == 4
+    assert len(MeasurementStore.load(path)) == 4             # autoflushed
+
+
+def test_autoflush_batches_by_flush_every(tmp_path):
+    import os
+    path = str(tmp_path / "m.json")
+    store = MeasurementStore(path, flush_every=3)
+    store.put(("a", 1, 1), 1.0)
+    store.put(("a", 1, 2), 1.0)
+    assert not os.path.exists(path)          # below the batch threshold
+    store.put(("a", 1, 3), 1.0)
+    assert os.path.exists(path)              # third put flushed atomically
+    assert len(MeasurementStore.load(path)) == 3
+
+
 def test_store_roundtrip_and_missing_measurement(tmp_path):
     path = str(tmp_path / "m.json")
     store = MeasurementStore(path, meta={"tile": 32})
@@ -130,6 +173,74 @@ def test_checked_in_recording_drives_wami_end_to_end():
     assert res1.theta_max > res1.theta_min > 0
     assert _front(res1) == _front(res2)
     assert res1.invocations == res2.invocations
+
+
+# ----------------------------------------------------------------------
+# tile routing + replay-miss policy
+# ----------------------------------------------------------------------
+def test_non_native_tile_routes_to_fallback():
+    from repro.apps.wami.pipeline import wami_hls_tool
+    sub, _ = _small()
+    oracle = PallasOracle(sub, timer=_fake_timer, native_tile=32,
+                          fallback=wami_hls_tool(tile=32))
+    native = oracle.synthesize("gradient", unrolls=4, ports=2, tile=32)
+    assert native.detail.get("wall_s") is not None       # measured path
+    other = oracle.synthesize("gradient", unrolls=4, ports=2, tile=64)
+    assert other.feasible and "wall_s" not in other.detail
+    assert other.tile == 64
+
+
+def test_tile_request_without_native_tile_is_an_error():
+    """An oracle with no declared native_tile cannot price a tile axis
+    — doing so would relabel one tile's measurements as another's."""
+    sub, _ = _small()
+    oracle = PallasOracle(sub, timer=_fake_timer)
+    with pytest.raises(ValueError, match="native_tile"):
+        oracle.synthesize("gradient", unrolls=4, ports=2, tile=64)
+
+
+def test_fallback_priced_native_point_reports_fallback_requirement(tmp_path):
+    """missing='fallback' points carry no wall_s; their PLM requirement
+    must come from the fallback's logic/PLM split, not be misread as an
+    all-memory measured footprint."""
+    from repro.apps.wami.pipeline import wami_hls_tool
+    sub, _ = _small()
+    path = str(tmp_path / "m.json")
+    store = MeasurementStore(path)
+    store.put(("gradient", 2, 4), 1.5e-3)
+    store.save()
+    lax = PallasOracle(sub, mode="replay",
+                       store=MeasurementStore.load(path),
+                       fallback=wami_hls_tool(tile=32), missing="fallback")
+    measured = lax.synthesize("gradient", unrolls=4, ports=2)
+    req_m = lax.plm_requirement("gradient", measured)
+    assert req_m.unit == "bytes" and req_m.area_logic == 0.0
+    modelled = lax.synthesize("gradient", unrolls=8, ports=2)
+    req_f = lax.plm_requirement("gradient", modelled)
+    assert req_f.unit == "mm2" and req_f.area_logic > 0.0
+    assert req_f.area_plm == pytest.approx(modelled.detail["area_plm"])
+
+
+def test_replay_missing_fallback_policy(tmp_path):
+    from repro.apps.wami.pipeline import wami_hls_tool
+    sub, _ = _small()
+    path = str(tmp_path / "m.json")
+    store = MeasurementStore(path)
+    store.put(("gradient", 2, 4), 1.5e-3)
+    store.save()
+    strict = PallasOracle(sub, mode="replay",
+                          store=MeasurementStore.load(path))
+    with pytest.raises(MissingMeasurementError):
+        strict.synthesize("gradient", unrolls=8, ports=2)
+    lax = PallasOracle(sub, mode="replay",
+                       store=MeasurementStore.load(path),
+                       fallback=wami_hls_tool(tile=32), missing="fallback")
+    hit = lax.synthesize("gradient", unrolls=4, ports=2)
+    assert hit.detail["wall_s"] == pytest.approx(1.5e-3)  # recorded point
+    miss = lax.synthesize("gradient", unrolls=8, ports=2)
+    assert miss.feasible and "wall_s" not in miss.detail  # fallback-priced
+    with pytest.raises(ValueError):
+        PallasOracle(sub, mode="replay", store=store, missing="fallback")
 
 
 # ----------------------------------------------------------------------
