@@ -25,28 +25,27 @@ import time
 
 
 def _share_plm_result(backend: str, workers: int = 8):
+    """Registry-resolved: ``build_session("wami", backend,
+    share_plm=True)``.  The measured drive goes through the classic
+    :func:`wami_plm_session` wrapper (same ``build_session`` call
+    underneath) so its measured-tiles default stays in one place."""
     if backend == "pallas":
         from repro.apps.wami.pallas import wami_plm_session
         return wami_plm_session(0.25, workers=workers).run()
-    from repro.apps.wami import wami_session
-    from repro.apps.wami.knobs import WAMI_TILE_SIZES
-    return wami_session(0.25, workers=workers, share_plm=True,
-                        tile_sizes=WAMI_TILE_SIZES).run()
+    from repro.core.registry import build_session
+    return build_session("wami", backend, share_plm=True,
+                         workers=workers).run()
 
 
 def run(report, backend: str = "analytical", share_plm: bool = False) -> None:
+    from repro.core.registry import build_session
     t0 = time.time()
     if share_plm:
         res = _share_plm_result(backend)
         cost_unit = "bytes" if backend == "pallas" else "mm2"
-    elif backend == "pallas":
-        from repro.apps.wami.pallas import wami_pallas_session
-        res = wami_pallas_session(0.25, workers=8).run()
-        cost_unit = "vmem_bytes"
     else:
-        from repro.apps.wami import wami_cosmos
-        res = wami_cosmos(delta=0.25, workers=8)   # batched == sequential
-        cost_unit = "mm2"
+        res = build_session("wami", backend, workers=8).run()
+        cost_unit = "vmem_bytes" if backend == "pallas" else "mm2"
     wall = time.time() - t0
 
     suffix = "_share_plm" if share_plm else ""

@@ -15,10 +15,11 @@ import time
 
 
 def run(report) -> None:
-    from repro.apps.wami import wami_cosmos, wami_exhaustive, wami_session
+    from repro.apps.wami import wami_exhaustive
+    from repro.core.registry import build_session
 
     t0 = time.time()
-    session = wami_session(delta=0.25, workers=8)
+    session = build_session("wami", "analytical", delta=0.25, workers=8)
     cos = session.run()
     exh = wami_exhaustive(workers=8)
     wall = time.time() - t0

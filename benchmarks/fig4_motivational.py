@@ -13,33 +13,31 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from repro.apps.wami import build_components, wami_knob_space
-from repro.core import InvocationRequest, HLSTool, OracleLedger, span
+from repro.apps.wami import wami_knob_space
+from repro.core import InvocationRequest, OracleLedger, span
+from repro.core.registry import build_tool
 from repro.kernels.wami_gradient import grid_steps, vmem_bytes
 
 
 def _gradient_rows(backend: str):
     """The priced (ports x unrolls) points of the Gradient component.
 
-    ``analytical`` sweeps the full Table-1 knob space through the HLS
-    model.  ``pallas`` replays the *measured* points of the checked-in
-    recording through a :class:`PallasOracle` — the subset the COSMOS
-    drive actually paid for (exhaustively measuring the space is exactly
-    what the paper's methodology avoids).
+    Both oracles resolve through the registry (``build_tool("wami",
+    backend)``).  ``analytical`` sweeps the full Table-1 knob space
+    through the HLS model.  ``pallas`` replays the *measured* points of
+    the checked-in recording — the subset the COSMOS drive actually
+    paid for (exhaustively measuring the space is exactly what the
+    paper's methodology avoids).
     """
     space = wami_knob_space("gradient")       # canonical Table-1 bounds
+    tool = OracleLedger(build_tool("wami", backend), workers=8)
     if backend == "pallas":
-        from repro.apps.wami.pallas import wami_pallas_oracle
-        oracle = wami_pallas_oracle("replay")
-        tool = OracleLedger(oracle, workers=8)
-        keys = sorted(k for k in oracle.store.entries if k[0] == "gradient")
+        store = tool.tool.store           # the native-tile recording
+        keys = sorted(k for k in store.entries if k[0] == "gradient")
         requests = [InvocationRequest("gradient", unrolls=u, ports=p)
                     for _, p, u in keys]
         unit = ("lam_ms", "area_bytes", 1e3)
     else:
-        comps = build_components()
-        tool = OracleLedger(HLSTool({"gradient": comps["gradient"].spec()}),
-                            workers=8)
         requests = [InvocationRequest("gradient", unrolls=unrolls,
                                       ports=ports)
                     for ports in space.ports()

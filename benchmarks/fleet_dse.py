@@ -1,45 +1,168 @@
 """Beyond-paper: COSMOS fleet allocation for a multi-stage ML system.
 
 The full paper methodology (Algorithm 1 regions -> Eq. 2 LP -> phi
-mapping) over the XLA-priced oracle: stages of an RLHF-style system
-(actor = zamba2-2.7b, learner = gemma2-9b) get fleet shares (ports) and
-inverse-microbatch (unrolls) knobs; the LP allocates chips to hit a
-target pipeline throughput at minimum total HBM claimed.
+mapping) over the registered ``fleet`` app — a hybrid flash-attention +
+SSD-scan pipeline (``get_app("fleet")``) — on either oracle family:
+
+  * ``--backend analytical`` — :class:`XLATool` fleet shares: the LP
+    allocates chips across the two stages to hit a target pipeline
+    throughput at minimum total HBM claimed;
+  * ``--backend pallas`` — the calibrated-measured backend: the same
+    stages priced by replaying the checked-in interpret-mode kernel
+    recording, with the XLA roofline *calibrated to those measurements*
+    (core/calibrate.py) pricing everything the recording does not
+    cover.
+
+Standalone, as the CI gate:
+
+    PYTHONPATH=src python benchmarks/fleet_dse.py --smoke
+    PYTHONPATH=src python benchmarks/fleet_dse.py --smoke --backend pallas
+
+which asserts (a) the COSMOS front matches the exhaustively composed
+front at its extremes and stays within the paper's mapping bound
+everywhere, and (b) COSMOS still beats the exhaustive baseline on
+oracle invocations (reduction >= 1) with the Fig. 11 ledger counting
+across both stages.  ``--record`` re-measures the kernel recording.
 """
 
 from __future__ import annotations
 
+import sys
 import time
 
-from repro.configs import SHAPES, get_config
-from repro.core import KnobSpace, cosmos_dse, exhaustive_dse, pipeline_tmg
-from repro.core.xlatool import XLATool
+
+def _fleet_drive(backend: str, workers: int = 4):
+    """(cosmos result, exhaustive result, app) through the registry."""
+    from repro.core import compose_exhaustive, exhaustive_dse
+    from repro.core.registry import build_session, build_tool, get_app
+
+    app = get_app("fleet")
+    tool = (build_tool("fleet", "pallas", missing="fallback")
+            if backend == "pallas" else None)
+    session = build_session("fleet", backend, tool=tool, workers=workers)
+    res = session.run()
+    ex_tool = (build_tool("fleet", "pallas", missing="fallback")
+               if backend == "pallas" else build_tool("fleet", "analytical"))
+    spaces = app.knob_spaces()
+    ex = exhaustive_dse(list(spaces), ex_tool, spaces, workers=workers)
+    front = compose_exhaustive(app.tmg(), ex.fronts, fixed=dict(app.fixed))
+    return res, ex, front
 
 
-def run(report) -> None:
+def run(report, backend: str = "analytical") -> None:
     t0 = time.time()
-    comps = {
-        "actor_zamba2": (get_config("zamba2-2.7b"), SHAPES[0]),
-        "learner_gemma2": (get_config("gemma2-9b"), SHAPES[0]),
-    }
-    tool = XLATool(comps)
-    tmg = pipeline_tmg(list(comps), buffers=2)
-    spaces = {n: KnobSpace(clock_ns=1.0, max_ports=5, max_unrolls=6)
-              for n in comps}
-    res = cosmos_dse(tmg, tool, spaces, delta=0.3, workers=4)
-    ex = exhaustive_dse(list(comps), XLATool(comps), spaces, workers=4)
+    res, ex, _front = _fleet_drive(backend)
     red = ex.total_invocations / max(1, res.total_invocations)
     wall = time.time() - t0
 
-    lines = ["# COSMOS fleet allocation (actor+learner pipeline)",
-             "theta_steps_per_s,total_hbm_TB,actor_chips,learner_chips"]
+    unit = ("vmem_bytes", 1.0) if backend == "pallas" else ("hbm_TB", 1e12)
+    lines = [f"# COSMOS fleet allocation (flash_attention + ssd_scan "
+             f"pipeline, backend={backend})",
+             f"theta_per_s,total_cost_{unit[0]},"
+             f"flash_ports,flash_unrolls,ssd_ports,ssd_unrolls"]
     for m in res.mapped:
-        chips = {o.component: int(o.synthesis.detail.get("chips", 0))
+        knobs = {o.component: (o.synthesis.ports, o.synthesis.unrolls)
                  for o in m.outcomes}
-        lines.append(f"{m.theta_actual:.3f},{m.cost_actual / 1e12:.2f},"
-                     f"{chips.get('actor_zamba2', 0)},"
-                     f"{chips.get('learner_gemma2', 0)}")
+        fa = knobs.get("flash_attention", (0, 0))
+        ss = knobs.get("ssd_scan", (0, 0))
+        lines.append(f"{m.theta_actual:.3f},{m.cost_actual / unit[1]:.3f},"
+                     f"{fa[0]},{fa[1]},{ss[0]},{ss[1]}")
     lines.append(f"# invocation reduction vs exhaustive pricing: {red:.1f}x")
-    report.write("fleet_dse", lines)
-    report.csv("fleet_dse", wall * 1e6,
+    name = ("fleet_dse" if backend == "analytical"
+            else f"fleet_dse_{backend}")
+    report.write(name, lines)
+    report.csv(name, wall * 1e6,
                f"points={len(res.mapped)}_reduction={red:.1f}x")
+
+
+def smoke(backend: str = "analytical") -> int:
+    """The fleet gate: COSMOS front vs the exhaustively composed exact
+    front + the Fig. 11 invocation-frugality check, per backend."""
+    t0 = time.time()
+    res, ex, front = _fleet_drive(backend, workers=8)
+    ratio = ex.total_invocations / max(1, res.total_invocations)
+    mapped = sorted(res.mapped, key=lambda m: m.theta_actual)
+    print(f"fleet-smoke backend={backend}: cosmos={res.total_invocations} "
+          f"exhaustive={ex.total_invocations} ratio={ratio:.2f}x "
+          f"points={len(mapped)} exact_front={len(front)} "
+          f"({time.time() - t0:.1f}s)")
+    ok = True
+    if not mapped or not front:
+        print("fleet-smoke: FAIL — empty front", file=sys.stderr)
+        return 1
+    if backend == "analytical":
+        # one pure model prices both drives: the extremes must coincide
+        # with the exact composed front
+        for got, want, label in ((mapped[0].theta_actual, front[0].perf,
+                                  "min"),
+                                 (mapped[-1].theta_actual, front[-1].perf,
+                                  "max")):
+            if abs(got - want) > 1e-6 * max(abs(want), 1e-12):
+                print(f"fleet-smoke: FAIL — theta_{label} {got:.6g} != "
+                      f"exhaustive {want:.6g}", file=sys.stderr)
+                ok = False
+    else:
+        # the measured drive replays only the points its own walk
+        # recorded, while the exhaustive sweep ALSO prices never-walked
+        # points through the calibrated fallback — the exact extremes
+        # need not coincide, but the COSMOS theta range must sit inside
+        # the exhaustively-achievable one
+        lo, hi = front[0].perf, front[-1].perf
+        if not (lo <= mapped[0].theta_actual * (1 + 1e-9)
+                and mapped[-1].theta_actual <= hi * (1 + 1e-9)):
+            print(f"fleet-smoke: FAIL — cosmos theta range "
+                  f"[{mapped[0].theta_actual:.6g}, "
+                  f"{mapped[-1].theta_actual:.6g}] outside exhaustive "
+                  f"[{lo:.6g}, {hi:.6g}]", file=sys.stderr)
+            ok = False
+    # every COSMOS Pareto point within a bounded factor of the cheapest
+    # exhaustive point at >= its throughput.  The bound is 2.0 (not the
+    # WAMI suite's 1.6): the XLA roofline plateaus in the unroll knob
+    # wherever a stage is compute-bound, and the paper's conservative
+    # phi resolves a plateau to the fastest (most-HBM) corner — the
+    # sigma > 10% cases Fig. 10 reports, not a regression
+    for p in res.pareto():
+        cands = [q.cost for q in front if q.perf >= p.perf * (1 - 1e-9)]
+        if cands and p.cost > min(cands) * 2.0:
+            print(f"fleet-smoke: FAIL — point (theta={p.perf:.4g}, "
+                  f"cost={p.cost:.4g}) is {p.cost / min(cands):.2f}x the "
+                  f"exhaustive front", file=sys.stderr)
+            ok = False
+    if ratio <= 1.0:
+        print("fleet-smoke: FAIL — COSMOS no longer beats exhaustive "
+              "on invocations", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+def record() -> int:
+    """Re-measure the fleet kernel recording (interpret mode) by driving
+    the exact session the replay backend reproduces."""
+    from repro.apps.fleet import fleet_pallas_oracle
+    from repro.core.registry import build_session
+    oracle = fleet_pallas_oracle("record")
+    res = build_session("fleet", "pallas", tool=oracle, workers=1).run()
+    saved = oracle.flush()
+    print(f"fleet-record: {len(oracle.store)} measured points -> {saved} "
+          f"({res.total_invocations} oracle invocations)")
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="front-vs-exhaustive + invocation-frugality gate")
+    ap.add_argument("--record", action="store_true",
+                    help="re-measure the interpret-mode kernel recording")
+    ap.add_argument("--backend", choices=["analytical", "pallas"],
+                    default="analytical")
+    args = ap.parse_args()
+    if args.record:
+        raise SystemExit(record())
+    if args.smoke:
+        raise SystemExit(smoke(args.backend))
+    from run import Report          # harness report, standalone
+    run(Report(), backend=args.backend)

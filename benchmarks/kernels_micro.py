@@ -43,54 +43,28 @@ def _max_err(a, b):
     return float(jnp.abs(fa - fb).max()) / max(1.0, denom)
 
 
-def _wami_pallas_cases(tile: int):
-    """(name, pallas_fn, oracle_fn, args) for every WAMI stage kernel."""
-    from repro.kernels import (wami_change_det, wami_debayer, wami_gradient,
-                               wami_grayscale, wami_steep, wami_warp)
-    key = jax.random.PRNGKey(3)
-    ks = jax.random.split(key, 7)
-    bayer = jax.random.uniform(ks[0], (tile, tile)) * 1023.0
-    rgb = jax.random.uniform(ks[1], (tile, tile, 3)) * 255.0
-    gray = jax.random.uniform(ks[2], (tile, tile)) * 255.0
-    gx = jax.random.normal(ks[3], (tile, tile))
-    gy = jax.random.normal(ks[4], (tile, tile))
-    sd = jax.random.normal(ks[5], (tile, tile, 6))
-    # shear terms small enough that every source fraction stays in
-    # ~[0.3, 0.7]: the floor() cell choice is then identical between the
-    # two compiled programs, so parity is exact instead of flipping
-    # gather cells at integer boundaries
-    p = jnp.array([1 / 1024, -1 / 2048, 0.5, 1 / 2048, -1 / 1024, 0.5],
-                  jnp.float32)
-    mu = gray[..., None] + jax.random.normal(ks[6], (tile, tile, 3)) * 8.0
-    var = jnp.full((tile, tile, 3), 36.0)
-    w = jnp.full((tile, tile, 3), 1.0 / 3.0)
-    return [
-        ("wami_debayer", wami_debayer.debayer, wami_debayer.debayer_oracle,
-         (bayer,)),
-        ("wami_grayscale", wami_grayscale.grayscale,
-         wami_grayscale.grayscale_oracle, (rgb,)),
-        ("wami_gradient", wami_gradient.gradient,
-         wami_gradient.gradient_oracle, (gray,)),
-        ("wami_steep", wami_steep.steepest_descent,
-         wami_steep.steepest_descent_oracle, (gx, gy)),
-        ("wami_hessian", wami_steep.hessian, wami_steep.hessian_oracle,
-         (sd,)),
-        ("wami_warp", wami_warp.warp_affine, wami_warp.warp_affine_oracle,
-         (gray, p)),
-        ("wami_change_det", wami_change_det.change_detection,
-         wami_change_det.change_detection_oracle, (gray, mu, var, w)),
-    ]
+def _registry_parity_cases(tile: int):
+    """(name, knobbed_fn, oracle_fn, args) from EVERY registered app
+    that exposes parity cases — the registry is the work list, so a new
+    app's kernels join the CI gate by registering, not by editing this
+    file."""
+    from repro.core.registry import list_apps
+    cases = []
+    for app in list_apps():
+        if app.parity_cases is not None:
+            cases += list(app.parity_cases(tile))
+    return cases
 
 
 def run_pallas(report, *, tile: int = 128, ports: int = 4, unrolls: int = 8,
                reps: int = 3, tol: float = 1e-4) -> int:
-    """Interpret-mode drive of every WAMI Pallas kernel vs its oracle.
-    Returns the number of parity failures."""
-    lines = [f"# WAMI Pallas kernels, interpret mode, tile={tile}, "
-             f"ports={ports}, unrolls={unrolls}",
+    """Interpret-mode drive of every registered app's Pallas kernels vs
+    their jnp oracles.  Returns the number of parity failures."""
+    lines = [f"# Pallas kernels (all registered apps), interpret mode, "
+             f"tile={tile}, ports={ports}, unrolls={unrolls}",
              "kernel,us_per_call_interpret,max_rel_err"]
     failures = 0
-    for name, fn, oracle, args in _wami_pallas_cases(tile):
+    for name, fn, oracle, args in _registry_parity_cases(tile):
         got = fn(*args, ports=ports, unrolls=unrolls, use_pallas=True,
                  interpret=True)
         want = oracle(*args)

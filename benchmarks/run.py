@@ -40,8 +40,9 @@ def main() -> None:
     ap.add_argument("--backend", choices=["analytical", "pallas"],
                     default="analytical",
                     help="oracle backend for the benches that support it "
-                         "(fig4, fig10, kernels); pallas replays the "
-                         "checked-in measurement recording")
+                         "(fig4, fig10, kernels, fleet — all resolved "
+                         "through the core.registry); pallas replays the "
+                         "checked-in measurement recordings")
     ap.add_argument("--share-plm", action="store_true",
                     help="memory-co-design variant for the benches that "
                          "support it (fig10): tile knob axis + shared-PLM "

@@ -6,8 +6,10 @@ from .components import (FRAME, N_LK, TILE, WamiComponent, build_components,
                          matrix_reshape, matrix_sub, sd_update,
                          steepest_descent, warp_affine)
 from .knobs import WAMI_KNOB_TABLE, wami_knob_space
-from .pallas import (default_measurement_path, wami_pallas_components,
-                     wami_pallas_oracle, wami_pallas_session)
+from .pallas import (WAMI_RECORDED_TILES, default_measurement_path,
+                     wami_measurement_set, wami_pallas_components,
+                     wami_pallas_oracle, wami_pallas_session,
+                     wami_parity_cases, wami_plm_session, wami_unit_system)
 from .pipeline import (MATRIX_INV_LATENCY_S, lucas_kanade, wami_app,
                        wami_cosmos, wami_exhaustive, wami_hls_tool,
                        wami_knob_spaces, wami_session, wami_tmg)
@@ -21,5 +23,6 @@ __all__ = [
     "wami_knob_spaces", "wami_session", "wami_cosmos", "wami_exhaustive",
     "WAMI_KNOB_TABLE", "wami_knob_space", "MATRIX_INV_LATENCY_S",
     "wami_pallas_components", "wami_pallas_oracle", "wami_pallas_session",
-    "default_measurement_path",
+    "wami_plm_session", "wami_unit_system", "wami_measurement_set",
+    "wami_parity_cases", "WAMI_RECORDED_TILES", "default_measurement_path",
 ]

@@ -1,9 +1,9 @@
 """The WAMI stages as a measured PallasOracle backend (DESIGN.md §2).
 
 Binds the knob-parameterized Pallas kernels under ``repro.kernels`` to
-the COSMOS component names, and builds the
-:class:`~repro.core.pallas_oracle.PallasOracle` the DSE drives instead
-of the analytical ``HLSTool``:
+the COSMOS component names, registers WAMI with the App/Backend
+registry (:mod:`repro.core.registry`), and keeps the classic session
+constructors as thin wrappers over ``build_session("wami", "pallas")``:
 
   * seven stages are priced by *running* their kernel on a PLM-sized
     tile (``ports`` -> lane-bank grid columns, ``unrolls`` -> rows per
@@ -14,9 +14,10 @@ of the analytical ``HLSTool``:
     fall back to the analytical tool inside the same oracle, so the
     full Fig. 8 TMG explores end-to-end;
   * in CI there is no TPU and interpret-mode wall clocks are noise, so
-    the default mode replays the recording checked in under
-    ``artifacts/measurements/`` (regenerate:
-    ``python examples/wami_pallas.py --record``).
+    the default mode replays the recordings checked in under
+    ``artifacts/measurements/`` through a
+    :class:`~repro.core.pallas_oracle.MeasurementSet` (regenerate:
+    ``python examples/wami_pallas.py --record [--tile N]``).
 
 Inputs are baked deterministically per tile size so that record and
 replay price the same physical workload.
@@ -25,33 +26,51 @@ replay price the same physical workload.
 from __future__ import annotations
 
 import os
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from ...core.hlsim import HLSTool
-from ...core.pallas_oracle import (MeasurementStore, PallasKernelSpec,
-                                   PallasOracle)
+from ...core.pallas_oracle import (MeasurementSet, MeasurementStore,
+                                   PallasKernelSpec, PallasOracle,
+                                   open_recording)
 from ...core.plm.units import UnitSystem, fit_unit_system
+from ...core.registry import App, build_session, register_app
 from ...core.session import ExplorationSession
 from ...kernels import (wami_change_det, wami_debayer, wami_gradient,
                         wami_grayscale, wami_steep, wami_warp)
 from . import components as C
+from .knobs import WAMI_TILE_SIZES
 from .pipeline import (MATRIX_INV_LATENCY_S, wami_hls_tool,
                        wami_knob_spaces, wami_plm_planner, wami_tmg)
 
 __all__ = ["wami_pallas_components", "wami_pallas_oracle",
            "wami_pallas_session", "wami_unit_system", "wami_plm_session",
-           "default_measurement_path"]
+           "wami_measurement_set", "wami_parity_cases",
+           "default_measurement_path", "WAMI_RECORDED_TILES"]
 
 _REPO_ROOT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "..", "..", ".."))
+
+# tiles with a recording checked in under artifacts/measurements/ —
+# interpret-mode walls, one store file per tile (ROADMAP: multi-tile
+# recordings); sessions load only the native 128 by default so legacy
+# walks keep their exact fallback-priced tile axis
+WAMI_RECORDED_TILES = (64, 128, 256)
 
 
 def default_measurement_path(tile: int = C.TILE) -> str:
     return os.path.join(_REPO_ROOT, "artifacts", "measurements",
                         f"wami_pallas_tile{tile}.json")
+
+
+def wami_measurement_set(tiles: Sequence[int] = (C.TILE,),
+                         *, flush_every: int = 0) -> MeasurementSet:
+    """The checked-in WAMI recordings for ``tiles``, as one routing set."""
+    return MeasurementSet.load(
+        (default_measurement_path(t) for t in tiles),
+        flush_every=flush_every)
 
 
 def wami_pallas_components(tile: int = C.TILE
@@ -119,9 +138,48 @@ def wami_pallas_components(tile: int = C.TILE
     }
 
 
+def wami_parity_cases(tile: int = C.TILE):
+    """(name, pallas_fn, oracle_fn, args) per WAMI stage kernel — the
+    interpret-mode parity gate's work list (kernels_micro)."""
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 7)
+    bayer = jax.random.uniform(ks[0], (tile, tile)) * 1023.0
+    rgb = jax.random.uniform(ks[1], (tile, tile, 3)) * 255.0
+    gray = jax.random.uniform(ks[2], (tile, tile)) * 255.0
+    gx = jax.random.normal(ks[3], (tile, tile))
+    gy = jax.random.normal(ks[4], (tile, tile))
+    sd = jax.random.normal(ks[5], (tile, tile, 6))
+    # shear terms small enough that every source fraction stays in
+    # ~[0.3, 0.7]: the floor() cell choice is then identical between the
+    # two compiled programs, so parity is exact instead of flipping
+    # gather cells at integer boundaries
+    p = jnp.array([1 / 1024, -1 / 2048, 0.5, 1 / 2048, -1 / 1024, 0.5],
+                  jnp.float32)
+    mu = gray[..., None] + jax.random.normal(ks[6], (tile, tile, 3)) * 8.0
+    var = jnp.full((tile, tile, 3), 36.0)
+    w = jnp.full((tile, tile, 3), 1.0 / 3.0)
+    return [
+        ("wami_debayer", wami_debayer.debayer, wami_debayer.debayer_oracle,
+         (bayer,)),
+        ("wami_grayscale", wami_grayscale.grayscale,
+         wami_grayscale.grayscale_oracle, (rgb,)),
+        ("wami_gradient", wami_gradient.gradient,
+         wami_gradient.gradient_oracle, (gray,)),
+        ("wami_steep", wami_steep.steepest_descent,
+         wami_steep.steepest_descent_oracle, (gx, gy)),
+        ("wami_hessian", wami_steep.hessian, wami_steep.hessian_oracle,
+         (sd,)),
+        ("wami_warp", wami_warp.warp_affine, wami_warp.warp_affine_oracle,
+         (gray, p)),
+        ("wami_change_det", wami_change_det.change_detection,
+         wami_change_det.change_detection_oracle, (gray, mu, var, w)),
+    ]
+
+
 def wami_pallas_oracle(mode: str = "replay", *, tile: int = C.TILE,
                        store: Optional[MeasurementStore] = None,
                        store_path: Optional[str] = None,
+                       measurements: Optional[MeasurementSet] = None,
                        fallback: Optional[HLSTool] = None,
                        interpret: bool = True,
                        flush_every: int = 16,
@@ -131,20 +189,22 @@ def wami_pallas_oracle(mode: str = "replay", *, tile: int = C.TILE,
     store every ``flush_every`` timings through the atomic rename
     protocol and resumes from whatever an interrupted campaign already
     flushed — killed recordings never re-pay for timed points."""
-    if store is None and mode in ("record", "replay"):
-        path = store_path or default_measurement_path(tile)
-        autoflush = flush_every if mode == "record" else 0
-        if mode == "replay" or os.path.exists(path):
-            store = MeasurementStore.load(path, flush_every=autoflush)
+    if measurements is None and mode in ("record", "replay"):
+        if store is not None:
+            measurements = MeasurementSet.from_store(store, tile=tile)
         else:
-            store = MeasurementStore(path, meta={"tile": tile,
-                                                 "interpret": interpret},
-                                     flush_every=autoflush)
+            measurements = open_recording(
+                store_path or default_measurement_path(tile), mode=mode,
+                tile=tile, interpret=interpret, flush_every=flush_every)
     return PallasOracle(wami_pallas_components(tile), mode=mode,
-                        store=store,
+                        measurements=measurements,
+                        components_factory=wami_pallas_components,
                         fallback=fallback or wami_hls_tool(),
                         interpret=interpret, timer=timer,
-                        native_tile=tile, **kwargs)
+                        native_tile=tile,
+                        record_hint=f"re-record with `python examples/"
+                                    f"wami_pallas.py --record --tile {tile}`",
+                        **kwargs)
 
 
 def wami_pallas_session(delta: float = 0.25, *, mode: str = "replay",
@@ -152,13 +212,12 @@ def wami_pallas_session(delta: float = 0.25, *, mode: str = "replay",
                         oracle: Optional[PallasOracle] = None,
                         **kwargs) -> ExplorationSession:
     """An :class:`ExplorationSession` over the WAMI TMG driven by the
-    measured backend — same phases, ledger semantics, and knob spaces as
-    :func:`~repro.apps.wami.pipeline.wami_session`."""
+    measured backend — ``build_session("wami", "pallas")`` with the
+    classic signature (same phases, ledger semantics, and knob spaces
+    as :func:`~repro.apps.wami.pipeline.wami_session`)."""
     tool = oracle or wami_pallas_oracle(mode, tile=tile)
-    return ExplorationSession(wami_tmg(), tool, wami_knob_spaces(),
-                              delta=delta,
-                              fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
-                              workers=workers, **kwargs)
+    return build_session("wami", "pallas", tool=tool, delta=delta,
+                         workers=workers, **kwargs)
 
 
 def wami_unit_system(tile: int = C.TILE,
@@ -175,17 +234,20 @@ def wami_unit_system(tile: int = C.TILE,
 
 def wami_plm_session(delta: float = 0.25, *, tile: int = C.TILE,
                      tile_sizes: Optional[tuple] = (64, 128),
+                     measured_tiles: Sequence[int] = (C.TILE,),
                      workers: int = 1, share_plm: bool = True,
                      **kwargs) -> ExplorationSession:
-    """The memory-co-design WAMI drive on the checked-in recording.
+    """The memory-co-design WAMI drive on the checked-in recordings.
 
     Everything the PLM subsystem adds, wired together (docs/memory.md):
 
       * the tile knob is a third axis on the tile-scaled components —
-        native-tile points replay the recording, other tiles are priced
-        by the unit-calibrated analytical fallback (``missing="fallback"``
-        also covers mapped unrolls the recorded walk never touched, so
-        the drive stays deterministic and machine-free);
+        tiles with a recording in ``measured_tiles`` replay measured
+        walls through the :class:`MeasurementSet`, other tiles are
+        priced by the unit-calibrated analytical fallback
+        (``missing="fallback"`` also covers mapped unrolls the recorded
+        walk never touched, so the drive stays deterministic and
+        machine-free);
       * the fallback reports measured-axis latencies and VMEM-byte areas
         (:func:`wami_unit_system`), so the mixed system front is
         unit-clean;
@@ -193,22 +255,61 @@ def wami_plm_session(delta: float = 0.25, *, tile: int = C.TILE,
         planner: the TMG certifies the six LK-loop components mutually
         exclusive and their PLMs become one shared multi-bank memory.
 
-    ``tile_sizes`` defaults to (64, 128) rather than the analytical
-    variant's full ``WAMI_TILE_SIZES``: only tile 128 is measured, and a
-    256 tile would add a third entirely-fallback-priced ladder to a
-    drive whose point is anchoring the axis in measurements (record a
-    tile-256 store and widen this once the ROADMAP's multi-tile
-    recordings land).
+    ``measured_tiles`` defaults to just the native 128 so the classic
+    drive stays byte-identical to the single-store era; pass e.g.
+    ``(64, 128)`` to replay the tile-64 recording instead of pricing
+    that ladder through the fallback (WAMI_RECORDED_TILES lists what is
+    on disk).  ``tile_sizes`` defaults to (64, 128) rather than the
+    analytical variant's full ``WAMI_TILE_SIZES`` for the same reason:
+    the axis stays anchored where measurements exist.
     """
     store = MeasurementStore.load(default_measurement_path(tile))
     units = wami_unit_system(tile, store=store)
     fallback = units.calibrated(wami_hls_tool())
+    measurements = MeasurementSet.from_store(store, tile=tile)
+    for extra in measured_tiles:
+        if extra != tile:
+            measurements.add(MeasurementStore.load(
+                default_measurement_path(extra)))
     oracle = PallasOracle(wami_pallas_components(tile), mode="replay",
-                          store=store, fallback=fallback,
-                          native_tile=tile, missing="fallback")
-    if share_plm:
-        kwargs.setdefault("memory_planner", wami_plm_planner())
-    spaces = wami_knob_spaces(tile_sizes=tuple(tile_sizes or ()))
-    return ExplorationSession(wami_tmg(), oracle, spaces, delta=delta,
-                              fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
-                              workers=workers, **kwargs)
+                          measurements=measurements,
+                          components_factory=wami_pallas_components,
+                          fallback=fallback,
+                          native_tile=tile, missing="fallback",
+                          record_hint=f"re-record with `python examples/"
+                                      f"wami_pallas.py --record --tile "
+                                      f"{tile}`")
+    # an explicitly empty tile_sizes means "no tile axis" — pass () so
+    # build_session does NOT substitute the app's measured default
+    return build_session("wami", "pallas", tool=oracle, delta=delta,
+                         share_plm=share_plm,
+                         tile_sizes=tuple(tile_sizes or ()),
+                         workers=workers, **kwargs)
+
+
+# ----------------------------------------------------------------------
+# registration: `get_app("wami")` resolves to this record
+# ----------------------------------------------------------------------
+register_app(App(
+    name="wami",
+    description="WAMI Lucas-Kanade + change detection (the paper's "
+                "Fig. 8 case study): 12 HLS components + 1 software stage",
+    tmg=wami_tmg,
+    knob_spaces=wami_knob_spaces,
+    analytical=wami_hls_tool,
+    fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
+    delta=0.25,
+    kernel_specs=wami_pallas_components,
+    native_tile=C.TILE,
+    measurement_path=default_measurement_path,
+    recorded_tiles=WAMI_RECORDED_TILES,
+    default_tiles=(C.TILE,),
+    calibrated_fallback=lambda store=None: wami_unit_system(
+        store=store).calibrated(wami_hls_tool()),
+    record_hint="re-record with `python examples/wami_pallas.py "
+                "--record [--tile N]`",
+    plm_planner=wami_plm_planner,
+    plm_tile_sizes=WAMI_TILE_SIZES,
+    plm_tile_sizes_measured=(64, 128),
+    parity_cases=wami_parity_cases,
+))

@@ -180,17 +180,16 @@ def wami_session(delta: float = 0.25, noise: float = 1.0, *,
                  tile_sizes: Tuple[int, ...] = (),
                  **kwargs) -> ExplorationSession:
     """An :class:`ExplorationSession` over the WAMI system — the object
-    API behind :func:`wami_cosmos` (phase control, progress events,
-    persistent caching, mid-run serialize/restore).  ``share_plm``
-    attaches the system-level PLM planner (docs/memory.md);
-    ``tile_sizes`` opens the tile knob axis."""
-    if share_plm:
-        kwargs.setdefault("memory_planner", wami_plm_planner())
-    return ExplorationSession(wami_tmg(), wami_hls_tool(noise=noise),
-                              wami_knob_spaces(tile_sizes=tile_sizes),
-                              delta=delta,
-                              fixed={"matrix_inv": MATRIX_INV_LATENCY_S},
-                              workers=workers, **kwargs)
+    API behind :func:`wami_cosmos`, now resolving through the registry
+    (``build_session("wami", "analytical")`` with the classic
+    signature).  ``share_plm`` attaches the system-level PLM planner
+    (docs/memory.md); ``tile_sizes`` opens the tile knob axis."""
+    from ...core.registry import build_session     # lazy: apps register late
+    return build_session("wami", "analytical",
+                         tool=wami_hls_tool(noise=noise), delta=delta,
+                         share_plm=share_plm,
+                         tile_sizes=tuple(tile_sizes),
+                         workers=workers, **kwargs)
 
 
 def wami_cosmos(delta: float = 0.25, noise: float = 1.0,

@@ -25,6 +25,9 @@ over a batched synthesis oracle:
   * :mod:`repro.core.plm` — the system-level PLM planner: the tile knob
     axis, the TMG non-concurrency certificate, shared-bank memory
     plans, and the one-cost-unit exchange rates (docs/memory.md)
+  * :mod:`repro.core.registry` — the App/Backend registry: one entry
+    point (``get_app``/``get_backend``/``build_session``) for every
+    workload x oracle pair (docs/backends.md)
 """
 
 from .characterize import CharacterizationResult, characterize_component, spans
@@ -43,8 +46,12 @@ from .calibrate import (CalibratedTool, CalibrationFit, calibrate_to_records,
 from .plm import (MemoryCompatGraph, MemoryGroup, MemoryPlan, PLMPlanner,
                   PLMRequirement, UnitSystem, exclusive_pairs,
                   fit_unit_system)
-from .pallas_oracle import (MeasurementStore, MissingMeasurementError,
-                            PallasKernelSpec, PallasOracle)
+from .pallas_oracle import (MeasurementSet, MeasurementStore,
+                            MissingMeasurementError, PallasKernelSpec,
+                            PallasOracle)
+from .registry import (App, Backend, build_session, build_tool, get_app,
+                       get_backend, list_apps, list_backends, register_app,
+                       register_backend)
 from .pareto import (DesignPoint, check_delta_curve, dominates_max_min,
                      dominates_min_min, pareto_front_max_min,
                      pareto_front_min_min, span)
@@ -62,7 +69,10 @@ __all__ = [
     "Oracle", "OracleBatchMixin", "OracleLedger", "CountingTool",
     "InvocationRequest", "InvocationRecord", "PersistentOracleCache",
     "PallasOracle", "PallasKernelSpec", "MeasurementStore",
-    "MissingMeasurementError",
+    "MeasurementSet", "MissingMeasurementError",
+    "App", "Backend", "register_app", "register_backend", "get_app",
+    "get_backend", "list_apps", "list_backends", "build_tool",
+    "build_session",
     "CalibratedTool", "CalibrationFit", "fit_latency_scales",
     "fit_area_scale", "calibrate_to_records",
     "PLMRequirement", "MemoryGroup", "MemoryPlan", "MemoryCompatGraph",

@@ -18,15 +18,20 @@ component's knob-parameterized Pallas kernel and *times* it
     block no longer fits the VMEM budget, and, like every backend, when
     ``max_states`` caps the Eq. (1) state estimate.
 
-Measurements are memoized per (component, ports, unrolls) — one physical
-point is timed exactly once per process, so a batched drive prices
-identically to a sequential one — and flow through a
-:class:`MeasurementStore` for record/replay: ``mode="record"`` times and
-persists, ``mode="replay"`` is fully deterministic and machine-free (CI
-has no TPU; the checked-in recording under ``artifacts/measurements/``
-drives the same fronts byte-for-byte).  Components without a Pallas
-kernel fall back to a wrapped analytical tool, so a mixed system (the
-full WAMI TMG) still explores end-to-end.
+Measurements are memoized per (component, ports, unrolls, tile) — one
+physical point is timed exactly once per process, so a batched drive
+prices identically to a sequential one — and flow through a
+:class:`MeasurementSet` for record/replay: a keyed map
+``(tile, device_kind) -> MeasurementStore`` the oracle routes every
+request through.  Tiles with a recording replay their measured walls;
+unrecorded tiles fall through to the analytical ``fallback`` (or raise,
+under ``missing="error"``), so a tile knob axis stays deterministic and
+machine-free even when only some tiles are measured.  ``mode="record"``
+times and persists, ``mode="replay"`` is fully deterministic and
+machine-free (CI has no TPU; the checked-in recordings under
+``artifacts/measurements/`` drive the same fronts byte-for-byte).
+Components without a Pallas kernel fall back to a wrapped analytical
+tool, so a mixed system (the full WAMI TMG) still explores end-to-end.
 """
 
 from __future__ import annotations
@@ -35,8 +40,9 @@ import json
 import os
 import threading
 import time
+import warnings
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Tuple)
 
 from .knobs import CDFGFacts, Synthesis, SynthesisTool
 from .oracle import OracleBatchMixin, call_synthesize
@@ -44,14 +50,22 @@ from .oracle import OracleBatchMixin, call_synthesize
 __all__ = [
     "PallasKernelSpec",
     "MeasurementStore",
+    "MeasurementSet",
     "MissingMeasurementError",
     "PallasOracle",
+    "open_recording",
 ]
 
-# one physical measurement: (component, ports, unrolls).  ``max_states``
-# is NOT part of the key — feasibility under a cap is decided from the
-# deterministic state model, never re-measured.
+# one physical measurement inside one store: (component, ports, unrolls).
+# ``max_states`` is NOT part of the key — feasibility under a cap is
+# decided from the deterministic state model, never re-measured.  The
+# tile lives one level up: it selects WHICH store via the
+# :class:`MeasurementSet` key (tile, device_kind).
 MeasureKey = Tuple[str, int, int]
+
+# a MeasurementSet routing key: (tile, device_kind); tile 0 = the
+# component's native tile, device_kind "interpret" = CPU interpret mode
+SetKey = Tuple[int, str]
 
 _VMEM_BUDGET = 16 * 1024 * 1024     # bytes per TPU core
 
@@ -134,6 +148,20 @@ class MeasurementStore:
             store.entries[(comp, int(p[1:]), int(u[1:]))] = float(wall_s)
         return store
 
+    @property
+    def tile(self) -> int:
+        """The tile this recording was made at (0 when untagged)."""
+        return int(self.meta.get("tile", 0))
+
+    @property
+    def device_kind(self) -> str:
+        """Where the walls came from: ``"interpret"`` (CPU interpret
+        mode) or the real device platform the recording tags."""
+        kind = self.meta.get("device_kind")
+        if kind:
+            return str(kind)
+        return "interpret" if self.meta.get("interpret", True) else "device"
+
     @staticmethod
     def _key_str(key: MeasureKey) -> str:
         comp, ports, unrolls = key
@@ -179,15 +207,120 @@ class MeasurementStore:
         return len(self.entries)
 
 
+class MeasurementSet:
+    """Multi-recording routing table: (tile, device_kind) -> store.
+
+    One oracle can now hold one :class:`MeasurementStore` per measured
+    tile (and per device kind — the same tile recorded in interpret mode
+    and on real hardware are different recordings).  The oracle resolves
+    every request's tile to a set key; a hit replays/records through
+    that store, a miss falls through to the analytical fallback or
+    raises, per the ``missing`` policy.
+
+    Stores keyed by tile 0 are "native tile" recordings from before the
+    tile axis existed; :meth:`from_store` (the legacy one-store shim)
+    additionally aliases such a store under its ``meta`` tile so a drive
+    that names the tile explicitly still hits the measured walls.
+    """
+
+    def __init__(self, stores: Optional[Dict[SetKey, MeasurementStore]] = None):
+        self._stores: Dict[SetKey, MeasurementStore] = dict(stores or {})
+
+    # -- construction --------------------------------------------------
+    @classmethod
+    def from_store(cls, store: MeasurementStore, *, tile: Optional[int] = None,
+                   device_kind: Optional[str] = None) -> "MeasurementSet":
+        """Back-compat shim: wrap a single legacy store.
+
+        ``tile``/``device_kind`` default to the store's ``meta`` tags.
+        When the caller declares no tile (0) but the recording tags one,
+        the store is reachable under BOTH keys — tile-0 ("native")
+        requests and requests naming the recorded tile resolve to the
+        same measured walls, which is what the old single-store design
+        got wrong (it errored on the explicit spelling).
+        """
+        kind = device_kind or store.device_kind
+        keyed = tile if tile is not None else store.tile
+        out = cls({(int(keyed), kind): store})
+        meta_tile = store.tile
+        if meta_tile and (int(keyed), kind) != (meta_tile, kind):
+            out._stores.setdefault((meta_tile, kind), store)
+        if keyed:
+            # an explicitly-tiled store also answers "native" requests
+            # when it is the only recording for its device kind
+            out._stores.setdefault((0, kind), store)
+        return out
+
+    @classmethod
+    def load(cls, paths: Iterable[str], *, flush_every: int = 0,
+             device_kind: Optional[str] = None) -> "MeasurementSet":
+        """Load several store files, keyed by their ``meta`` tags."""
+        out = cls()
+        for path in paths:
+            store = MeasurementStore.load(path, flush_every=flush_every)
+            out.add(store, device_kind=device_kind)
+        return out
+
+    def add(self, store: MeasurementStore, *, tile: Optional[int] = None,
+            device_kind: Optional[str] = None) -> "MeasurementSet":
+        key = (int(tile if tile is not None else store.tile),
+               device_kind or store.device_kind)
+        if key in self._stores:
+            raise ValueError(f"MeasurementSet already holds a store for "
+                             f"key (tile={key[0]}, device={key[1]!r})")
+        self._stores[key] = store
+        return self
+
+    # -- lookup --------------------------------------------------------
+    def get(self, tile: int, device_kind: str) -> Optional[MeasurementStore]:
+        return self._stores.get((int(tile), device_kind))
+
+    def keys(self) -> List[SetKey]:
+        return sorted(self._stores)
+
+    def tiles(self, device_kind: Optional[str] = None) -> Tuple[int, ...]:
+        return tuple(sorted({t for t, k in self._stores
+                             if device_kind is None or k == device_kind}))
+
+    def stores(self) -> List[MeasurementStore]:
+        """The distinct stores (aliases collapse), in key order."""
+        seen: List[MeasurementStore] = []
+        for key in self.keys():
+            store = self._stores[key]
+            if not any(store is s for s in seen):
+                seen.append(store)
+        return seen
+
+    def save_all(self) -> List[str]:
+        """Persist every store that has a path (record-mode flush)."""
+        return [s.save() for s in self.stores() if s.path is not None]
+
+    def describe(self) -> str:
+        return ", ".join(f"(tile={t}, device={k!r})" for t, k in self.keys()) \
+            or "<empty>"
+
+    def __contains__(self, key: SetKey) -> bool:
+        return (int(key[0]), key[1]) in self._stores
+
+    def __len__(self) -> int:
+        return len(self._stores)
+
+
 class PallasOracle(OracleBatchMixin):
     """The measured synthesis oracle (SynthesisTool/Oracle protocols).
 
     ``mode``:
       * ``"measure"`` — compile + time every new point (memoized);
-      * ``"record"``  — measure, and persist every timing into ``store``;
-      * ``"replay"``  — never execute; raise
-        :class:`MissingMeasurementError` on a point absent from
-        ``store`` (re-record with ``examples/wami_pallas.py --record``).
+      * ``"record"``  — measure, and persist every timing into the
+        resolved tile's store;
+      * ``"replay"``  — never execute; a point absent from the resolved
+        store follows the ``missing`` policy below.
+
+    ``measurements`` is a :class:`MeasurementSet` — the multi-recording
+    map ``(tile, device_kind) -> MeasurementStore`` every request routes
+    through.  The legacy single-store spelling
+    (``store=..., native_tile=...``) still works via
+    :meth:`MeasurementSet.from_store` but is deprecated.
 
     ``fallback`` prices components that have no Pallas kernel (e.g. the
     6x6 matrix stages of WAMI) through an analytical tool, so a mixed
@@ -196,16 +329,20 @@ class PallasOracle(OracleBatchMixin):
     deterministic one to make a *fresh* drive byte-comparable to a
     replayed one.
 
-    ``native_tile`` declares the PLM tile the kernel specs (and the
-    recording) were built at.  A synthesis requested at any other tile
-    is routed to the fallback tool, which re-prices the component at
-    that tile analytically — the recording stays single-tile, the tile
-    knob axis still explores (pair with a unit-calibrated fallback,
-    :mod:`repro.core.plm.units`, to keep the axes comparable).
+    ``native_tile`` declares the tile the ``components`` kernel specs
+    were built at; a request's tile resolves to it when unset (tile 0).
+    A resolved tile with a recording in ``measurements`` replays (or
+    records) measured walls; any other tile is routed to the fallback
+    tool, which re-prices the component at that tile analytically (pair
+    with a unit-calibrated fallback, :mod:`repro.core.plm.units`, to
+    keep the axes comparable).  ``components_factory(tile)`` — when
+    given — rebuilds the kernel specs at a measured non-native tile so
+    multi-tile recordings price with the right geometry.
 
     ``missing`` picks the replay behaviour for a point absent from the
-    recording: ``"error"`` (default) raises
-    :class:`MissingMeasurementError` — the strict CI semantics;
+    resolved recording: ``"error"`` (default) raises
+    :class:`MissingMeasurementError` naming the missing
+    ``(tile, device_kind)`` key — the strict CI semantics;
     ``"fallback"`` prices it through the fallback tool instead, which is
     what a drive whose walk *extends* the recorded one (e.g. the tile
     knob reshapes the LP and hence the mapped unroll choices) needs to
@@ -215,6 +352,9 @@ class PallasOracle(OracleBatchMixin):
     def __init__(self, components: Dict[str, PallasKernelSpec], *,
                  mode: str = "measure",
                  store: Optional[MeasurementStore] = None,
+                 measurements: Optional[MeasurementSet] = None,
+                 components_factory: Optional[
+                     Callable[[int], Dict[str, PallasKernelSpec]]] = None,
                  fallback: Optional[SynthesisTool] = None,
                  interpret: bool = True,
                  vmem_budget: int = _VMEM_BUDGET,
@@ -222,6 +362,8 @@ class PallasOracle(OracleBatchMixin):
                  reps: int = 3,
                  native_tile: int = 0,
                  missing: str = "error",
+                 device_kind: Optional[str] = None,
+                 record_hint: Optional[str] = None,
                  timer: Optional[Callable[..., float]] = None):
         if mode not in ("measure", "record", "replay"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -229,20 +371,50 @@ class PallasOracle(OracleBatchMixin):
             raise ValueError(f"unknown missing policy {missing!r}")
         if missing == "fallback" and fallback is None:
             raise ValueError("missing='fallback' requires a fallback tool")
-        if mode in ("record", "replay") and store is None:
-            raise ValueError(f"mode={mode!r} requires a MeasurementStore")
+        if store is not None and measurements is not None:
+            raise ValueError("pass either store= (legacy, one recording) "
+                             "or measurements= (MeasurementSet), not both")
+        self.interpret = interpret
+        self.device_kind = device_kind or (
+            "interpret" if interpret else _default_device_kind())
+        if store is not None:
+            warnings.warn(
+                "PallasOracle(store=...) is the legacy single-recording "
+                "surface; pass measurements=MeasurementSet.from_store(...) "
+                "(or build a multi-tile set) instead",
+                DeprecationWarning, stacklevel=2)
+            measurements = MeasurementSet.from_store(
+                store, tile=native_tile or None,
+                device_kind=self.device_kind)
+        if mode in ("record", "replay") and (measurements is None
+                                             or len(measurements) == 0):
+            raise ValueError(f"mode={mode!r} requires a MeasurementStore "
+                             f"or a non-empty MeasurementSet")
         self.components = dict(components)
         self.mode = mode
-        self.store = store
+        self.measurements = measurements or MeasurementSet()
         self.fallback = fallback
-        self.interpret = interpret
         self.vmem_budget = int(vmem_budget)
         self.bank_overhead_bytes = int(bank_overhead_bytes)
         self.reps = max(1, int(reps))
         self.native_tile = int(native_tile)
         self.missing = missing
+        # the app-specific re-record command shown in miss errors (the
+        # oracle serves many apps now; a WAMI hint on a fleet miss
+        # would point at the wrong recording)
+        self.record_hint = record_hint
         self.timer = timer
-        self._measured: Dict[MeasureKey, float] = {}
+        self._factory = components_factory
+        # tiles whose requests resolve onto the native ``components``
+        # specs: the declared native tile, the untagged 0, and — for the
+        # legacy shim — whatever tile the native store's meta carries
+        self._native_tiles = {0, self.native_tile}
+        native_store = self.measurements.get(self.native_tile,
+                                             self.device_kind)
+        if native_store is not None and native_store.tile:
+            self._native_tiles.add(native_store.tile)
+        self._specs_cache: Dict[int, Dict[str, PallasKernelSpec]] = {}
+        self._measured: Dict[Tuple[str, int, int, int], float] = {}
         self._lock = threading.Lock()
         # timing under a thread-pool fan-out measures contention, not the
         # kernel: _measure_lock serializes every real measurement even
@@ -250,6 +422,43 @@ class PallasOracle(OracleBatchMixin):
         # replay never executes and can fan out freely
         self._measure_lock = threading.Lock()
         self.batch_workers = 8 if mode == "replay" else 1
+
+    # ------------------------------------------------------------------
+    # routing: request tile -> (specs, store)
+    # ------------------------------------------------------------------
+    @property
+    def store(self) -> Optional[MeasurementStore]:
+        """The native-tile recording (legacy surface; may be None)."""
+        return self.measurements.get(self.native_tile, self.device_kind)
+
+    def _resolve_tile(self, tile: int) -> int:
+        return tile or self.native_tile
+
+    def _store_for(self, resolved: int) -> Optional[MeasurementStore]:
+        return self.measurements.get(resolved, self.device_kind)
+
+    def _specs_for(self, resolved: int
+                   ) -> Optional[Dict[str, PallasKernelSpec]]:
+        if resolved in self._native_tiles:
+            return self.components
+        if self._factory is None:
+            return None
+        specs = self._specs_cache.get(resolved)
+        if specs is None:
+            specs = dict(self._factory(resolved))
+            self._specs_cache[resolved] = specs
+        return specs
+
+    def _measured_here(self, component: str, resolved: int) -> bool:
+        """True when (component, resolved tile) is priced by running /
+        replaying a kernel rather than by the fallback tool."""
+        if component not in self.components:
+            return False        # kernel coverage is per component name
+        if self._specs_for(resolved) is None:
+            return False
+        if self.mode in ("record", "replay"):
+            return self._store_for(resolved) is not None
+        return True             # measure mode: time it live
 
     # ------------------------------------------------------------------
     # measurement
@@ -264,27 +473,38 @@ class PallasOracle(OracleBatchMixin):
             best = min(best, time.perf_counter() - t0)
         return best
 
-    def _wall_s(self, spec: PallasKernelSpec, ports: int,
-                unrolls: int) -> float:
+    def _missing_error(self, key: MeasureKey, resolved: int
+                       ) -> MissingMeasurementError:
+        comp, ports, unrolls = key
+        hint = self.record_hint or ("re-record the recording for this key "
+                                    "(docs/backends.md)")
+        return MissingMeasurementError(
+            f"no recorded measurement for {comp!r} (ports={ports}, "
+            f"unrolls={unrolls}) under key (tile={resolved}, "
+            f"device={self.device_kind!r}); recorded keys: "
+            f"{self.measurements.describe()}; {hint}")
+
+    def _wall_s(self, spec: PallasKernelSpec, ports: int, unrolls: int,
+                resolved: int) -> float:
+        memo_key = (spec.name, ports, unrolls, resolved)
         key: MeasureKey = (spec.name, ports, unrolls)
+        store = self._store_for(resolved)
         with self._lock:
-            hit = self._measured.get(key)
+            hit = self._measured.get(memo_key)
         if hit is not None:
             return hit
         if self.mode == "replay":
-            wall = self.store.get(key)
+            wall = store.get(key)
             if wall is None:
-                raise MissingMeasurementError(
-                    f"no recorded measurement for {key}; re-record with "
-                    f"`python examples/wami_pallas.py --record`")
-        elif self.mode == "record" and self.store.get(key) is not None:
+                raise self._missing_error(key, resolved)
+        elif self.mode == "record" and store.get(key) is not None:
             # resumed campaign: the point was already paid for (and
             # flushed) by the killed run — never re-time it
-            wall = self.store.get(key)
+            wall = store.get(key)
         else:
             with self._measure_lock:
                 with self._lock:              # raced while waiting?
-                    hit = self._measured.get(key)
+                    hit = self._measured.get(memo_key)
                 if hit is not None:
                     return hit
                 if self.timer is not None:
@@ -297,9 +517,9 @@ class PallasOracle(OracleBatchMixin):
         with self._lock:
             # a racing measurement of the same key keeps the first value,
             # so every consumer sees one number per physical point
-            wall = self._measured.setdefault(key, wall)
-            if self.mode == "record" and self.store.get(key) != wall:
-                self.store.put(key, wall)    # may autoflush (flush_every)
+            wall = self._measured.setdefault(memo_key, wall)
+            if self.mode == "record" and store.get(key) != wall:
+                store.put(key, wall)         # may autoflush (flush_every)
         return wall
 
     # ------------------------------------------------------------------
@@ -324,33 +544,37 @@ class PallasOracle(OracleBatchMixin):
     # ------------------------------------------------------------------
     def _route_fallback(self, component: str, tile: int) -> bool:
         """True when (component, tile) is priced by the fallback tool:
-        the component has no kernel, or the tile is not the recording's."""
-        if component not in self.components:
-            return True
-        return bool(tile and self.native_tile
-                    and tile != self.native_tile)
+        the component has no kernel, or the resolved tile has no
+        recording (and cannot be measured live)."""
+        return not self._measured_here(component, self._resolve_tile(tile))
 
     def synthesize(self, component: str, *, unrolls: int, ports: int,
                    max_states: Optional[int] = None,
                    tile: int = 0) -> Synthesis:
-        if (tile and not self.native_tile
+        resolved = self._resolve_tile(tile)
+        measured = self._measured_here(component, resolved)
+        if (tile and not measured and not self.native_tile
+                and self._factory is None
                 and component in self.components):
-            # without a declared native tile the oracle cannot tell
-            # whether the request matches the kernels/recording — pricing
-            # it anyway would fabricate a tile axis out of one tile's
+            # without a declared native tile (or a spec factory, or a
+            # recording covering this tile) the oracle cannot tell
+            # whether the request matches the kernels — pricing it
+            # anyway would fabricate a tile axis out of one tile's
             # measurements (and collide store keys in record mode)
             raise ValueError(
                 f"tile={tile} requested for {component!r} but this "
-                f"PallasOracle declares no native_tile; pass native_tile= "
-                f"so tile routing is defined")
-        if self._route_fallback(component, tile):
+                f"PallasOracle declares no native_tile and no recording "
+                f"covers key (tile={tile}, device={self.device_kind!r}) "
+                f"(recorded keys: {self.measurements.describe()}); pass "
+                f"native_tile= or add a MeasurementStore for that key")
+        if not measured:
             if self.fallback is None:
                 raise KeyError(f"no Pallas kernel or fallback tool for "
                                f"component {component!r} (tile={tile})")
             return call_synthesize(self.fallback, component,
                                    unrolls=unrolls, ports=ports,
                                    max_states=max_states, tile=tile)
-        spec = self.components[component]
+        spec = self._specs_for(resolved)[component]
         if not spec.divisible(ports, unrolls):
             return self._infeasible(ports, unrolls, 0, tile)
         states = spec.states(ports, unrolls)
@@ -364,7 +588,7 @@ class PallasOracle(OracleBatchMixin):
             # failed synthesis
             return self._infeasible(ports, unrolls, states, tile)
         try:
-            wall = self._wall_s(spec, ports, unrolls)
+            wall = self._wall_s(spec, ports, unrolls, resolved)
         except MissingMeasurementError:
             if self.missing != "fallback":
                 raise
@@ -382,7 +606,7 @@ class PallasOracle(OracleBatchMixin):
             tile=tile)
 
     def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts:
-        # a feasible native-tile synthesis without a measured wall came
+        # a feasible measured-tile synthesis without a measured wall came
         # from the missing="fallback" path: its Eq. (1) facts must match
         # the model that actually scheduled it, or the derived caps get
         # applied across two different state models
@@ -392,15 +616,16 @@ class PallasOracle(OracleBatchMixin):
             if self.fallback is None:
                 raise KeyError(component)
             return self.fallback.cdfg_facts(component, synth)
-        return self.components[component].facts()
+        return self._specs_for(
+            self._resolve_tile(synth.tile))[component].facts()
 
     def plm_requirement(self, component: str, synth: Synthesis):
         """The measured component's memory demand: its entire area IS
         VMEM footprint (the TPU shadow of the PLM), so capacity = area
         bytes and the datapath share is zero.  Fallback-priced points
-        delegate to the fallback tool — including native-tile points the
-        ``missing="fallback"`` policy priced analytically, recognizable
-        by the absence of the measured ``wall_s`` detail."""
+        delegate to the fallback tool — including measured-tile points
+        the ``missing="fallback"`` policy priced analytically,
+        recognizable by the absence of the measured ``wall_s`` detail."""
         from .plm.spec import PLMRequirement      # lazy: avoid cycles
         if (self._route_fallback(component, synth.tile)
                 or "wall_s" not in (synth.detail or {})):
@@ -414,7 +639,42 @@ class PallasOracle(OracleBatchMixin):
 
     # ------------------------------------------------------------------
     def flush(self) -> Optional[str]:
-        """Persist the store (record mode); no-op otherwise."""
-        if self.mode == "record" and self.store is not None:
-            return self.store.save()
-        return None
+        """Persist the recordings (record mode); no-op otherwise.
+        Returns the native store's path when one was written."""
+        if self.mode != "record":
+            return None
+        saved = self.measurements.save_all()
+        native = self.store
+        if native is not None and native.path in saved:
+            return native.path
+        return saved[0] if saved else None
+
+
+def _default_device_kind() -> str:
+    """The real-device tag for non-interpret measurements."""
+    try:
+        import jax
+        return str(jax.default_backend())
+    except Exception:           # pragma: no cover - jax always importable
+        return "device"
+
+
+def open_recording(path: str, *, mode: str, tile: int = 0,
+                   interpret: bool = True,
+                   flush_every: int = 16) -> MeasurementSet:
+    """The record/replay bootstrap every app shares: load ``path`` when
+    it exists (replay always loads — a missing file should fail loudly),
+    otherwise start a fresh tagged store for a record campaign, and wrap
+    the result as a single-recording :class:`MeasurementSet`.  Record
+    mode autoflushes every ``flush_every`` timings; replay never writes.
+    """
+    autoflush = flush_every if mode == "record" else 0
+    if mode == "replay" or os.path.exists(path):
+        store = MeasurementStore.load(path, flush_every=autoflush)
+    else:
+        kind = "interpret" if interpret else _default_device_kind()
+        store = MeasurementStore(path,
+                                 meta={"tile": tile, "interpret": interpret,
+                                       "device_kind": kind},
+                                 flush_every=autoflush)
+    return MeasurementSet.from_store(store, tile=tile)

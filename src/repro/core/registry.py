@@ -1,0 +1,326 @@
+"""The App/Backend registry: one entry point for every workload x oracle.
+
+COSMOS is compositional — the same characterize -> plan -> map
+methodology applies to *any* accelerator — but until this module each
+benchmark hand-wired its own ``if backend == "pallas"`` ladder and each
+app grew bespoke session constructors.  The registry replaces both
+seams with two small declarative records:
+
+  * an :class:`App` bundles everything an
+    :class:`~repro.core.session.ExplorationSession` needs about a
+    workload: the TMG factory, the per-component knob spaces, fixed
+    (software) latencies, the analytical tool, and — when the app has
+    measured kernels — the ``PallasKernelSpec`` factory, its recordings
+    on disk, the unit-calibrated fallback, and the PLM planner;
+  * a :class:`Backend` bundles an oracle factory plus capability
+    metadata: measured vs analytical, which recorded tiles it can
+    replay for an app, and the calibration hook that puts an analytical
+    model onto the measured axes.
+
+``get_app("wami")`` / ``get_backend("pallas")`` resolve by name (apps
+self-register on first use via their package import), and
+:func:`build_session` is the single session constructor every benchmark
+and example drives:
+
+    session = build_session("wami", "pallas", share_plm=True)
+    result = session.run()
+
+Registering a new workload is one :func:`register_app` call — see
+docs/backends.md for the how-to and the current apps x backends support
+matrix.
+"""
+
+from __future__ import annotations
+
+import importlib
+import os
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
+
+from .knobs import KnobSpace
+from .pallas_oracle import MeasurementSet, PallasKernelSpec, PallasOracle
+from .session import ExplorationSession
+from .tmg import TMG
+
+__all__ = [
+    "App",
+    "Backend",
+    "register_app",
+    "register_backend",
+    "get_app",
+    "get_backend",
+    "list_apps",
+    "list_backends",
+    "build_tool",
+    "build_session",
+]
+
+
+@dataclass(frozen=True)
+class App:
+    """One registered workload: everything a session needs, bundled.
+
+    ``tmg``/``knob_spaces``/``analytical`` are zero-config factories
+    (``knob_spaces`` must accept a ``tile_sizes=`` keyword when
+    ``plm_tile_sizes`` is non-empty).  ``fixed`` maps software
+    transitions to their fixed effective latency.  The measured-backend
+    fields are optional: an app without ``kernel_specs`` simply does not
+    support measured backends (``Backend.supports`` reports it).
+
+    ``recorded_tiles`` lists every tile with a checked-in recording —
+    capability metadata; ``default_tiles`` is the subset sessions load
+    unless the caller opts into more (``build_session(tiles=...)``).
+    The two differ on purpose: loading a new recording by default would
+    silently re-price walks that previously fell back analytically.
+    """
+
+    name: str
+    description: str
+    tmg: Callable[[], TMG]
+    knob_spaces: Callable[..., Dict[str, KnobSpace]]
+    analytical: Callable[[], Any]
+    fixed: Dict[str, float] = field(default_factory=dict)
+    delta: float = 0.25
+    # measured-backend surface (optional)
+    kernel_specs: Optional[Callable[[int],
+                                    Dict[str, PallasKernelSpec]]] = None
+    native_tile: int = 0
+    measurement_path: Optional[Callable[[int], str]] = None
+    recorded_tiles: Tuple[int, ...] = ()
+    default_tiles: Tuple[int, ...] = ()
+    # called as calibrated_fallback(store=<native recording>) when the
+    # caller already holds the loaded store, or with no arguments
+    calibrated_fallback: Optional[Callable[..., Any]] = None
+    record_hint: Optional[str] = None          # app's re-record command
+    # memory-co-design surface (optional)
+    plm_planner: Optional[Callable[[], Any]] = None
+    plm_tile_sizes: Tuple[int, ...] = ()            # analytical tile axis
+    plm_tile_sizes_measured: Tuple[int, ...] = ()   # measured-drive axis
+    # interpret-mode parity cases: (tile) -> [(name, fn, oracle, args)]
+    parity_cases: Optional[Callable[..., List]] = None
+
+    def available_tiles(self) -> Tuple[int, ...]:
+        """The recorded tiles whose store files exist on disk."""
+        if self.measurement_path is None:
+            return ()
+        return tuple(t for t in self.recorded_tiles
+                     if os.path.exists(self.measurement_path(t)))
+
+    def measurement_set(self, tiles: Optional[Sequence[int]] = None
+                        ) -> MeasurementSet:
+        """Load the app's recordings for ``tiles`` (default: the app's
+        ``default_tiles``) into one routing set."""
+        if self.measurement_path is None:
+            raise ValueError(f"app {self.name!r} has no recordings")
+        use = tuple(tiles if tiles is not None else self.default_tiles)
+        return MeasurementSet.load(self.measurement_path(t) for t in use)
+
+
+@dataclass(frozen=True)
+class Backend:
+    """One registered oracle family: factory + capability metadata.
+
+    ``make_tool(app, share_plm=..., tiles=..., mode=...)`` returns the
+    synthesis tool a session drives for ``app``.  ``measured`` says
+    whether prices come from executing kernels (record/replay) or from
+    a closed-form model; ``supports``/``supported_tiles`` are the
+    capability questions benchmarks ask before wiring a scenario, and
+    ``calibrate`` is the hook that returns the app's analytical model
+    re-scaled onto this backend's measured axes (None when the backend
+    is itself analytical, or the app has no recordings to fit against).
+    """
+
+    name: str
+    description: str
+    measured: bool
+    make_tool: Callable[..., Any]
+    supports: Callable[[App], bool] = lambda app: True
+    supported_tiles: Callable[[App], Tuple[int, ...]] = lambda app: ()
+    calibrate: Optional[Callable[[App], Any]] = None
+
+
+# ----------------------------------------------------------------------
+# the registries
+# ----------------------------------------------------------------------
+_APPS: Dict[str, App] = {}
+_BACKENDS: Dict[str, Backend] = {}
+
+# built-in apps self-register when their package is imported; the lazy
+# import (on first lookup) avoids a core -> apps import cycle
+_BUILTIN_APP_MODULES: Dict[str, str] = {
+    "wami": "repro.apps.wami",
+    "fleet": "repro.apps.fleet",
+}
+
+
+def register_app(app: App) -> App:
+    """Idempotent by name: re-registering the same name replaces the
+    entry (module reloads in notebooks would otherwise error)."""
+    _APPS[app.name] = app
+    return app
+
+
+def register_backend(backend: Backend) -> Backend:
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def _ensure_builtin_apps(name: Optional[str] = None) -> None:
+    wanted = ([name] if name in _BUILTIN_APP_MODULES
+              else list(_BUILTIN_APP_MODULES))
+    for key in wanted:
+        if key not in _APPS:
+            importlib.import_module(_BUILTIN_APP_MODULES[key])
+
+
+def get_app(name: str) -> App:
+    """Resolve a registered workload by name (importing built-ins on
+    first use).  Unknown names list what IS registered."""
+    if name not in _APPS:
+        _ensure_builtin_apps(name)
+    try:
+        return _APPS[name]
+    except KeyError:
+        raise KeyError(f"unknown app {name!r}; registered apps: "
+                       f"{sorted(_APPS) or '<none>'}") from None
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; registered backends: "
+                       f"{sorted(_BACKENDS)}") from None
+
+
+def list_apps() -> List[App]:
+    _ensure_builtin_apps()
+    return [_APPS[n] for n in sorted(_APPS)]
+
+
+def list_backends() -> List[Backend]:
+    return [_BACKENDS[n] for n in sorted(_BACKENDS)]
+
+
+# ----------------------------------------------------------------------
+# the built-in backends
+# ----------------------------------------------------------------------
+def _analytical_tool(app: App, **_opts: Any) -> Any:
+    return app.analytical()
+
+
+def _pallas_supports(app: App) -> bool:
+    return app.kernel_specs is not None and bool(app.available_tiles())
+
+
+def _pallas_tool(app: App, *, share_plm: bool = False,
+                 tiles: Optional[Sequence[int]] = None,
+                 mode: str = "replay", missing: Optional[str] = None,
+                 **opts: Any) -> PallasOracle:
+    """The measured oracle for ``app``: replay its recordings through a
+    :class:`MeasurementSet`, fall back analytically elsewhere.
+
+    Plain drives keep the strict ``missing="error"`` semantics over the
+    raw analytical tool; ``share_plm`` drives use the unit-calibrated
+    fallback with ``missing="fallback"`` so the tile axis (and any
+    mapped point outside the recorded walk) prices deterministically.
+    """
+    if app.kernel_specs is None:
+        raise ValueError(f"app {app.name!r} has no Pallas kernel specs; "
+                         f"measured backends are unsupported "
+                         f"(supported apps: "
+                         f"{[a.name for a in list_apps() if _pallas_supports(a)]})")
+    measurements = app.measurement_set(tiles)
+    if share_plm or missing == "fallback":
+        missing = "fallback"
+        if app.calibrated_fallback is not None:
+            # hand the hook the already-loaded native recording so the
+            # unit fit does not re-read the JSON from disk
+            kind = ("interpret" if opts.get("interpret", True)
+                    else "device")
+            fallback = app.calibrated_fallback(
+                store=measurements.get(app.native_tile, kind))
+        else:
+            fallback = app.analytical()
+    else:
+        fallback = app.analytical()
+        missing = missing or "error"
+    return PallasOracle(
+        app.kernel_specs(app.native_tile), mode=mode,
+        measurements=measurements,
+        components_factory=app.kernel_specs,
+        fallback=fallback, native_tile=app.native_tile,
+        missing=missing, record_hint=app.record_hint, **opts)
+
+
+def _pallas_calibrate(app: App) -> Any:
+    if app.calibrated_fallback is None:
+        return None
+    return app.calibrated_fallback()
+
+
+register_backend(Backend(
+    name="analytical",
+    description="closed-form models (HLS scheduler / XLA roofline); "
+                "no recordings needed",
+    measured=False,
+    make_tool=_analytical_tool,
+))
+
+register_backend(Backend(
+    name="pallas",
+    description="measured Pallas kernels via MeasurementSet record/replay; "
+                "unrecorded points fall back analytically",
+    measured=True,
+    make_tool=_pallas_tool,
+    supports=_pallas_supports,
+    supported_tiles=lambda app: app.available_tiles(),
+    calibrate=_pallas_calibrate,
+))
+
+
+# ----------------------------------------------------------------------
+# the one session constructor
+# ----------------------------------------------------------------------
+def build_tool(app: App | str, backend: Backend | str = "analytical",
+               **opts: Any) -> Any:
+    """The oracle for (app, backend) without a session around it — what
+    single-component benchmarks (fig4) and custom drives use."""
+    app = get_app(app) if isinstance(app, str) else app
+    backend = get_backend(backend) if isinstance(backend, str) else backend
+    return backend.make_tool(app, **opts)
+
+
+def build_session(app: App | str, backend: Backend | str = "analytical",
+                  *, delta: Optional[float] = None, workers: int = 1,
+                  share_plm: bool = False,
+                  tile_sizes: Optional[Sequence[int]] = None,
+                  tiles: Optional[Sequence[int]] = None,
+                  tool: Any = None,
+                  **kwargs: Any) -> ExplorationSession:
+    """Build the :class:`ExplorationSession` for any registered
+    workload x oracle pair.
+
+    ``share_plm`` attaches the app's PLM planner and opens its tile
+    axis (``tile_sizes`` overrides the app's per-backend default);
+    ``tiles`` selects which recordings a measured backend loads
+    (default: the app's ``default_tiles``); ``tool`` injects a
+    pre-built oracle (skipping the backend factory).  Remaining
+    keywords flow to :class:`ExplorationSession`.
+    """
+    app = get_app(app) if isinstance(app, str) else app
+    backend = get_backend(backend) if isinstance(backend, str) else backend
+    if tool is None:
+        tool = backend.make_tool(app, share_plm=share_plm, tiles=tiles)
+    if share_plm:
+        if app.plm_planner is not None:
+            kwargs.setdefault("memory_planner", app.plm_planner())
+        if tile_sizes is None:
+            tile_sizes = (app.plm_tile_sizes_measured if backend.measured
+                          else app.plm_tile_sizes)
+    spaces = (app.knob_spaces(tile_sizes=tuple(tile_sizes))
+              if tile_sizes else app.knob_spaces())
+    return ExplorationSession(app.tmg(), tool, spaces,
+                              delta=app.delta if delta is None else delta,
+                              fixed=dict(app.fixed), workers=workers,
+                              **kwargs)

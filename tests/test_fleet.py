@@ -1,0 +1,104 @@
+"""The fleet app (flash_attention + ssd_scan): the first non-WAMI
+workload through the full cosmos_dse + PLM-planner path, on both the
+analytical and the calibrated-measured backends."""
+
+import pytest
+
+from repro.apps.fleet import (fleet_calibrated_tool, fleet_kernel_specs,
+                              fleet_knob_spaces, fleet_pallas_oracle,
+                              fleet_session, fleet_tmg, fleet_unit_system,
+                              fleet_xla_tool)
+from repro.core import build_session, build_tool, get_app
+from repro.core.plm.compat import exclusive_pairs
+
+
+def _front(res):
+    return [(p.perf, p.cost) for p in res.pareto()]
+
+
+# ----------------------------------------------------------------------
+# system model
+# ----------------------------------------------------------------------
+def test_fleet_tmg_certifies_the_stages_exclusive():
+    """buffers=1 channels serialize the two stages, so the PLM planner
+    may pack both onto one shared VMEM pool."""
+    assert frozenset(("flash_attention", "ssd_scan")) \
+        in exclusive_pairs(fleet_tmg())
+
+
+def test_kernel_specs_divisibility_matches_the_real_grids():
+    specs = fleet_kernel_specs()
+    fa, ssd = specs["flash_attention"], specs["ssd_scan"]
+    assert fa.divisible(2, 4) and fa.divisible(4, 8)
+    assert not fa.divisible(3, 4) and not fa.divisible(2, 5)
+    assert ssd.divisible(4, 8) and not ssd.divisible(4, 5)
+
+
+# ----------------------------------------------------------------------
+# end-to-end, both backends
+# ----------------------------------------------------------------------
+def test_fleet_analytical_end_to_end():
+    res = build_session("fleet", "analytical", workers=4).run()
+    assert len(res.mapped) >= 5
+    assert set(res.invocations) == {"flash_attention", "ssd_scan"}
+    assert all(res.invocations[n] > 0 for n in res.invocations)
+    assert res.theta_max > res.theta_min > 0
+
+
+@pytest.mark.slow
+def test_fleet_calibrated_measured_end_to_end_deterministic():
+    """The checked-in interpret recording drives the measured backend
+    deterministically (replay == replay, byte for byte), with the
+    Fig. 11 ledger counting both stages."""
+    r1 = fleet_session(backend="pallas", workers=4).run()
+    r2 = fleet_session(backend="pallas", workers=4).run()
+    assert _front(r1) == _front(r2)
+    assert r1.invocations == r2.invocations
+    assert set(r1.invocations) == {"flash_attention", "ssd_scan"}
+    # at least one mapped point per stage replayed a measured wall
+    for comp in ("flash_attention", "ssd_scan"):
+        assert any("wall_s" in (o.synthesis.detail or {})
+                   for m in r1.mapped for o in m.outcomes
+                   if o.component == comp)
+
+
+@pytest.mark.slow
+def test_fleet_share_plm_groups_the_stages():
+    """share_plm on the measured backend: the certified-exclusive
+    stages share one VMEM pool and the planned cost dominates the
+    naive sum pointwise (strictly somewhere)."""
+    tool = fleet_pallas_oracle("replay")
+    res = build_session("fleet", "pallas", tool=tool, share_plm=True,
+                        workers=4).run()
+    assert all(m.cost_actual <= m.cost_unshared + 1e-9 for m in res.mapped)
+    assert any(m.cost_actual < m.cost_unshared * (1 - 1e-12)
+               for m in res.mapped)
+    groups = {g for m in res.mapped for g in m.plm_groups}
+    assert ("flash_attention", "ssd_scan") in groups
+
+
+# ----------------------------------------------------------------------
+# calibration
+# ----------------------------------------------------------------------
+def test_fleet_calibration_fits_from_the_recording():
+    units = fleet_unit_system()
+    assert units.unit == "bytes"
+    assert units.area_scale > 0 and units.area_points > 0
+    for comp in ("flash_attention", "ssd_scan"):
+        assert units.lam.scale(comp) > 0
+        assert units.lam.points[comp] > 0
+    cal = fleet_calibrated_tool()
+    raw = fleet_xla_tool().synthesize("ssd_scan", unrolls=2, ports=2)
+    scaled = cal.synthesize("ssd_scan", unrolls=2, ports=2)
+    assert scaled.lam == pytest.approx(
+        raw.lam * units.lam.scale("ssd_scan"))
+    assert scaled.area == pytest.approx(raw.area * units.area_scale)
+
+
+def test_fleet_registry_round_trip():
+    app = get_app("fleet")
+    assert app.kernel_specs is not None
+    assert set(app.knob_spaces()) == set(fleet_knob_spaces())
+    oracle = build_tool("fleet", "pallas", missing="fallback")
+    s = oracle.synthesize("flash_attention", unrolls=1, ports=1)
+    assert s.feasible and "wall_s" in s.detail      # the recorded point

@@ -6,9 +6,12 @@ import math
 import pytest
 
 from repro.apps.wami.pallas import (default_measurement_path,
+                                    wami_measurement_set,
                                     wami_pallas_components,
-                                    wami_pallas_oracle, wami_pallas_session)
-from repro.core import (CalibratedTool, KnobSpace, MeasurementStore,
+                                    wami_pallas_oracle, wami_pallas_session,
+                                    wami_plm_session)
+from repro.core import (CalibratedTool, InvocationRequest, KnobSpace,
+                        MeasurementSet, MeasurementStore,
                         MissingMeasurementError, OracleLedger, PallasOracle,
                         Synthesis, cosmos_dse, fit_latency_scales)
 from repro.core.tmg import pipeline_tmg
@@ -241,6 +244,152 @@ def test_replay_missing_fallback_policy(tmp_path):
     assert miss.feasible and "wall_s" not in miss.detail  # fallback-priced
     with pytest.raises(ValueError):
         PallasOracle(sub, mode="replay", store=store, missing="fallback")
+
+
+# ----------------------------------------------------------------------
+# MeasurementSet: multi-recording routing
+# ----------------------------------------------------------------------
+def _store_with(tmp_path, name, tile, entries):
+    store = MeasurementStore(str(tmp_path / name),
+                             meta={"tile": tile, "interpret": True})
+    for key, wall in entries.items():
+        store.put(key, wall)
+    store.save()
+    return store
+
+
+def test_measurement_set_native_hit_and_multi_tile_routing(tmp_path):
+    """Recorded tiles replay measured walls; unrecorded tiles fall
+    through to the fallback tool."""
+    from repro.apps.wami.pipeline import wami_hls_tool
+    s32 = _store_with(tmp_path, "t32.json", 32,
+                      {("gradient", 2, 4): 1.0e-3})
+    s64 = _store_with(tmp_path, "t64.json", 64,
+                      {("gradient", 2, 4): 3.0e-3})
+    ms = MeasurementSet()
+    ms.add(s32)
+    ms.add(s64)
+    assert ms.keys() == [(32, "interpret"), (64, "interpret")]
+    oracle = PallasOracle(wami_pallas_components(32), mode="replay",
+                          measurements=ms,
+                          components_factory=wami_pallas_components,
+                          fallback=wami_hls_tool(tile=32),
+                          native_tile=32, missing="fallback")
+    native = oracle.synthesize("gradient", unrolls=4, ports=2)
+    assert native.detail["wall_s"] == pytest.approx(1.0e-3)
+    t64 = oracle.synthesize("gradient", unrolls=4, ports=2, tile=64)
+    assert t64.detail["wall_s"] == pytest.approx(3.0e-3)
+    assert t64.tile == 64
+    # measured tiles see tile geometry: same knobs, 2x edge => 4x blocks
+    assert t64.area > native.area
+    t128 = oracle.synthesize("gradient", unrolls=4, ports=2, tile=128)
+    assert t128.feasible and "wall_s" not in t128.detail    # fallback
+    # facts for a measured non-native tile come from that tile's specs
+    assert oracle.cdfg_facts("gradient", t64).trip == 64
+
+
+def test_measurement_set_missing_error_names_key_and_lists_available(
+        tmp_path):
+    s32 = _store_with(tmp_path, "t32.json", 32,
+                      {("gradient", 2, 4): 1.0e-3})
+    oracle = PallasOracle(wami_pallas_components(32), mode="replay",
+                          measurements=MeasurementSet().add(s32),
+                          native_tile=32, missing="error")
+    with pytest.raises(MissingMeasurementError) as exc:
+        oracle.synthesize("gradient", unrolls=8, ports=2)
+    msg = str(exc.value)
+    assert "(tile=32, device='interpret')" in msg      # the missing key
+    assert "recorded keys" in msg                      # ...and what exists
+
+
+def test_recorded_tile_resolves_without_native_tile_declared(tmp_path):
+    """The old single-store design raised ValueError for an explicit
+    tile even when that tile WAS the recording's — the MeasurementSet
+    shim must resolve it instead."""
+    store = _store_with(tmp_path, "t32.json", 32,
+                        {("gradient", 2, 4): 1.0e-3})
+    with pytest.warns(DeprecationWarning):
+        oracle = PallasOracle(wami_pallas_components(32), mode="replay",
+                              store=MeasurementStore.load(store.path))
+    hit = oracle.synthesize("gradient", unrolls=4, ports=2, tile=32)
+    assert hit.feasible and hit.detail["wall_s"] == pytest.approx(1.0e-3)
+    native = oracle.synthesize("gradient", unrolls=4, ports=2)
+    assert native.detail["wall_s"] == pytest.approx(1.0e-3)
+    # a genuinely unrecorded tile still errors, naming the missing key
+    with pytest.raises((ValueError, MissingMeasurementError),
+                       match="tile=64"):
+        oracle.synthesize("gradient", unrolls=4, ports=2, tile=64)
+
+
+def test_legacy_store_shim_warns_and_preserves_cache_keys(tmp_path):
+    """PallasOracle(store=...) deprecates but stays byte-compatible:
+    same results, same OracleLedger cache keys as measurements=."""
+    store = _store_with(tmp_path, "t32.json", 32,
+                        {("gradient", 2, 4): 1.0e-3,
+                         ("grayscale", 1, 4): 2.0e-3})
+    with pytest.warns(DeprecationWarning, match="legacy single-recording"):
+        legacy = PallasOracle(wami_pallas_components(32), mode="replay",
+                              store=MeasurementStore.load(store.path),
+                              native_tile=32)
+    modern = PallasOracle(wami_pallas_components(32), mode="replay",
+                          measurements=MeasurementSet.from_store(
+                              MeasurementStore.load(store.path), tile=32),
+                          native_tile=32)
+    requests = [InvocationRequest("gradient", unrolls=4, ports=2),
+                InvocationRequest("grayscale", unrolls=4, ports=1),
+                InvocationRequest("gradient", unrolls=4, ports=2, tile=32)]
+    led_a, led_b = OracleLedger(legacy), OracleLedger(modern)
+    out_a = led_a.evaluate_batch(requests)
+    out_b = led_b.evaluate_batch(requests)
+    assert [(s.lam, s.area, s.tile) for s in out_a] \
+        == [(s.lam, s.area, s.tile) for s in out_b]
+    keys_a = sorted((r.component, r.unrolls, r.ports, r.tile)
+                    for r in led_a.records)
+    assert keys_a == sorted((r.component, r.unrolls, r.ports, r.tile)
+                            for r in led_b.records)
+    assert led_a.invocations == led_b.invocations
+
+
+def test_checked_in_multi_tile_recordings_route_measured_vs_fallback():
+    """The REAL recorded artifacts (tile 64 + 128): a multi-tile session
+    oracle replays measured walls at both tiles and falls back only on
+    genuinely unrecorded tiles — the ROADMAP multi-tile item, exercised
+    against the committed recordings rather than mocks."""
+    import os
+    for tile in (64, 128):
+        assert os.path.exists(default_measurement_path(tile))
+    from repro.apps.wami.pallas import wami_unit_system
+    from repro.apps.wami.pipeline import wami_hls_tool
+    ms = wami_measurement_set((64, 128))
+    assert ms.tiles("interpret") == (64, 128)
+    oracle = PallasOracle(
+        wami_pallas_components(128), mode="replay", measurements=ms,
+        components_factory=wami_pallas_components,
+        fallback=wami_unit_system().calibrated(wami_hls_tool()),
+        native_tile=128, missing="fallback")
+    s128 = oracle.synthesize("gradient", unrolls=1, ports=1, tile=128)
+    s64 = oracle.synthesize("gradient", unrolls=1, ports=1, tile=64)
+    s256 = oracle.synthesize("gradient", unrolls=1, ports=1, tile=256)
+    assert "wall_s" in s128.detail and "wall_s" in s64.detail
+    assert s256.feasible and "wall_s" not in s256.detail
+    # distinct recordings, distinct walls
+    assert s64.detail["wall_s"] != s128.detail["wall_s"]
+
+
+def test_plm_session_with_measured_tiles_replays_tile64(tmp_path):
+    """wami_plm_session(measured_tiles=(64, 128)) drives the tile axis
+    measured-vs-fallback end to end and stays deterministic."""
+    res = wami_plm_session(0.25, measured_tiles=(64, 128), workers=4).run()
+    measured_t64 = [
+        o for m in res.mapped for o in m.outcomes
+        if o.synthesis.tile == 64 and "wall_s" in (o.synthesis.detail or {})]
+    assert measured_t64, "no mapped tile-64 point replayed a measured wall"
+    # the default (single-recording) drive prices ALL tile-64 points
+    # through the fallback — the recordings genuinely change the drive
+    base = wami_plm_session(0.25, workers=4).run()
+    assert not [o for m in base.mapped for o in m.outcomes
+                if o.synthesis.tile == 64
+                and "wall_s" in (o.synthesis.detail or {})]
 
 
 # ----------------------------------------------------------------------

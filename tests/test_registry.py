@@ -1,0 +1,114 @@
+"""The App/Backend registry: round-trips, unknown-name errors, and the
+apps x backends support matrix (every supported pair smoke-constructs)."""
+
+import pytest
+
+from repro.core import (App, Backend, ExplorationSession, KnobSpace,
+                        PallasOracle, build_session, build_tool, get_app,
+                        get_backend, list_apps, list_backends, register_app,
+                        register_backend)
+from repro.core.hlsim import HLSTool
+from repro.core.registry import _APPS
+from repro.core.tmg import pipeline_tmg
+
+
+# ----------------------------------------------------------------------
+# round-trips
+# ----------------------------------------------------------------------
+def test_builtin_apps_resolve_by_name():
+    assert get_app("wami").name == "wami"
+    assert get_app("fleet").name == "fleet"
+    names = [a.name for a in list_apps()]
+    assert "wami" in names and "fleet" in names
+
+
+def test_builtin_backends_resolve_by_name():
+    analytical = get_backend("analytical")
+    pallas = get_backend("pallas")
+    assert not analytical.measured and pallas.measured
+    assert {b.name for b in list_backends()} >= {"analytical", "pallas"}
+
+
+def test_unknown_names_list_whats_registered():
+    with pytest.raises(KeyError, match="wami"):
+        get_app("nonesuch")
+    with pytest.raises(KeyError, match="analytical"):
+        get_backend("nonesuch")
+
+
+def test_register_app_round_trip():
+    app = App(
+        name="toy-registry-test",
+        description="two-stage toy",
+        tmg=lambda: pipeline_tmg(["a", "b"]),
+        knob_spaces=lambda **_: {n: KnobSpace(clock_ns=1.0, max_ports=2,
+                                              max_unrolls=4)
+                                 for n in ("a", "b")},
+        analytical=lambda: HLSTool({}),
+    )
+    try:
+        register_app(app)
+        assert get_app("toy-registry-test") is app
+        assert get_backend("analytical").supports(app)
+        assert not get_backend("pallas").supports(app)   # no kernel specs
+    finally:
+        _APPS.pop("toy-registry-test", None)
+
+
+# ----------------------------------------------------------------------
+# capability metadata
+# ----------------------------------------------------------------------
+def test_wami_capability_metadata():
+    wami = get_app("wami")
+    pallas = get_backend("pallas")
+    assert pallas.supports(wami)
+    tiles = pallas.supported_tiles(wami)
+    assert 128 in tiles                 # the checked-in native recording
+    assert set(tiles) <= set(wami.recorded_tiles)
+    cal = pallas.calibrate(wami)
+    assert cal is not None and hasattr(cal, "synthesize")
+
+
+def test_fleet_capability_metadata():
+    fleet = get_app("fleet")
+    assert get_backend("pallas").supports(fleet)
+    assert get_backend("pallas").supported_tiles(fleet) == (0,)
+    assert get_backend("analytical").supports(fleet)
+
+
+# ----------------------------------------------------------------------
+# the support matrix: every supported pair smoke-constructs
+# ----------------------------------------------------------------------
+def test_every_supported_pair_smoke_constructs():
+    for app in list_apps():
+        for backend in list_backends():
+            if not backend.supports(app):
+                continue
+            session = build_session(app.name, backend.name)
+            assert isinstance(session, ExplorationSession)
+            assert set(session.spaces) == {
+                t.name for t in session.tmg.transitions} - set(app.fixed)
+
+
+def test_build_tool_returns_the_backend_oracle():
+    assert isinstance(build_tool("wami", "pallas"), PallasOracle)
+    tool = build_tool("wami", "analytical")
+    assert hasattr(tool, "synthesize") and not isinstance(tool, PallasOracle)
+
+
+def test_build_session_injected_tool_skips_factory():
+    marker = build_tool("wami", "analytical")
+    session = build_session("wami", "analytical", tool=marker)
+    assert session.ledger.tool is marker
+
+
+# ----------------------------------------------------------------------
+# registry-resolved drives stay byte-identical to the classic wrappers
+# ----------------------------------------------------------------------
+def test_registry_session_matches_classic_wami_session():
+    from repro.apps.wami import wami_session
+    a = wami_session(delta=0.3, workers=4).run()
+    b = build_session("wami", "analytical", delta=0.3, workers=4).run()
+    assert [(m.theta_actual, m.cost_actual) for m in a.mapped] \
+        == [(m.theta_actual, m.cost_actual) for m in b.mapped]
+    assert a.invocations == b.invocations
