@@ -18,8 +18,12 @@ from repro.core.autotune import (HBM_BYTES_PER_CHIP, choose_train_knobs,
 
 MESH = {"data": 16, "model": 16}
 
+# a fixed pseudo-cell: the planner walks the LLM config zoo through the
+# analytical autotune pricing, not a registered App's TMG
+SCENARIOS = {"pairs": (("zoo", "analytical"),)}
 
-def run(report) -> None:
+
+def run(report, cell) -> None:
     t0 = time.time()
     shape = SHAPES[0]           # train_4k
     lines = ["# COSMOS-TPU planner: train_4k knob choice per arch "

@@ -23,6 +23,12 @@ import statistics
 import sys
 import time
 
+# the WAMI system Pareto, on both oracle families; share_plm is the
+# memory-co-design variant (tile axis + shared-PLM system cost) — a
+# cell axis, not a global flag
+SCENARIOS = {"apps": ("wami",), "backends": "*",
+             "variants": ("", "share_plm")}
+
 
 def _share_plm_result(backend: str, workers: int = 8):
     """Registry-resolved: ``build_session("wami", backend,
@@ -37,8 +43,10 @@ def _share_plm_result(backend: str, workers: int = 8):
                          workers=workers).run()
 
 
-def run(report, backend: str = "analytical", share_plm: bool = False) -> None:
+def run(report, cell) -> None:
     from repro.core.registry import build_session
+    backend = cell.backend
+    share_plm = cell.variant == "share_plm"
     t0 = time.time()
     if share_plm:
         res = _share_plm_result(backend)
@@ -145,4 +153,6 @@ if __name__ == "__main__":
     if args.smoke:
         raise SystemExit(smoke(args.backend))
     from run import Report          # harness report, standalone
-    run(Report(), backend=args.backend, share_plm=args.share_plm)
+    from scenarios import Cell
+    run(Report(), Cell("fig10", "wami", args.backend,
+                       "share_plm" if args.share_plm else ""))

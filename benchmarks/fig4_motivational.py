@@ -18,6 +18,9 @@ from repro.core import InvocationRequest, OracleLedger, span
 from repro.core.registry import build_tool
 from repro.kernels.wami_gradient import grid_steps, vmem_bytes
 
+# the Gradient component is WAMI's; both oracle families price it
+SCENARIOS = {"apps": ("wami",), "backends": "*"}
+
 
 def _gradient_rows(backend: str):
     """The priced (ports x unrolls) points of the Gradient component.
@@ -52,7 +55,8 @@ def _gradient_rows(backend: str):
     return rows, unit
 
 
-def run(report, backend: str = "analytical") -> None:
+def run(report, cell) -> None:
+    backend = cell.backend
     t0 = time.time()
     rows, (lam_col, area_col, _) = _gradient_rows(backend)
     wall = time.time() - t0

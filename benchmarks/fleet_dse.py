@@ -30,6 +30,9 @@ from __future__ import annotations
 import sys
 import time
 
+# the fleet allocation study, on both oracle families
+SCENARIOS = {"apps": ("fleet",), "backends": "*"}
+
 
 def _fleet_drive(backend: str, workers: int = 4):
     """(cosmos result, exhaustive result, app) through the registry."""
@@ -49,7 +52,8 @@ def _fleet_drive(backend: str, workers: int = 4):
     return res, ex, front
 
 
-def run(report, backend: str = "analytical") -> None:
+def run(report, cell) -> None:
+    backend = cell.backend
     t0 = time.time()
     res, ex, _front = _fleet_drive(backend)
     red = ex.total_invocations / max(1, res.total_invocations)
@@ -165,4 +169,5 @@ if __name__ == "__main__":
     if args.smoke:
         raise SystemExit(smoke(args.backend))
     from run import Report          # harness report, standalone
-    run(Report(), backend=args.backend)
+    from scenarios import Cell
+    run(Report(), Cell("fleet", "fleet", args.backend))

@@ -1,19 +1,19 @@
-"""Kernel micro-benchmarks.
+"""Kernel micro-benchmarks — one cell per registered app x backend.
 
-Two backends (``--backend`` / the harness's ``--backend`` flag):
+Both cells drive the app's registered ``parity_cases`` (the registry
+is the work list: a new app's kernels join by registering):
 
-  * ``analytical`` (default) — CPU XLA-reference wall time + model
-    GFLOP/s.  Wall times here are CPU-backend reference-path timings;
-    CPU microseconds are reported only to catch regressions in the XLA
-    fallback paths.
-  * ``pallas`` — every WAMI stage kernel runs through its Pallas path
-    in interpret mode and is checked against its jnp oracle; the
-    reported numbers are interpret-mode walls (structural, not TPU
-    performance) plus the parity error.  ``--smoke`` shrinks the tile
-    and exits non-zero on any parity failure — the CI gate that the
-    measured backend's kernels still compute the right thing.
+  * ``analytical`` — the same cases timed down their XLA reference
+    path (``use_pallas=False``).  CPU microseconds, reported only to
+    catch regressions in the jnp fallback kernels.
+  * ``pallas`` — every kernel runs through its Pallas path in
+    interpret mode and is checked against its jnp oracle; the reported
+    numbers are interpret-mode walls (structural, not TPU performance)
+    plus the parity error.  ``--smoke`` shrinks the tile and exits
+    non-zero on any parity failure — the CI gate that the measured
+    backend's kernels still compute the right thing.
 
-Standalone:
+Standalone (all apps at once):
 
     PYTHONPATH=src python benchmarks/kernels_micro.py --smoke --backend pallas
 """
@@ -24,6 +24,21 @@ import time
 
 import jax
 import jax.numpy as jnp
+
+# every registered app joins both cells through its parity cases: the
+# pallas cell checks + times the kernels in interpret mode, the
+# analytical cell times the same cases down their XLA reference path
+SCENARIOS = {"apps": "*", "backends": ("analytical", "pallas")}
+
+
+def cell_skip_reason(app, backend, variant):
+    """Bench-specific capability: both kernels cells drive the app's
+    registered parity cases (interpret mode needs no recordings, so the
+    registry's recording-based pallas check would be too strict)."""
+    if app.parity_cases is None:
+        return (f"app {app.name!r} registers no parity cases "
+                f"(nothing for the kernels bench to drive)")
+    return None
 
 
 def _time(fn, *args, reps=5, **kw):
@@ -43,28 +58,33 @@ def _max_err(a, b):
     return float(jnp.abs(fa - fb).max()) / max(1.0, denom)
 
 
-def _registry_parity_cases(tile: int):
-    """(name, knobbed_fn, oracle_fn, args) from EVERY registered app
-    that exposes parity cases — the registry is the work list, so a new
-    app's kernels join the CI gate by registering, not by editing this
-    file."""
+def _registry_parity_cases(tile: int, app: str | None = None):
+    """(name, knobbed_fn, oracle_fn, args) from registered apps that
+    expose parity cases (all of them, or just ``app``) — the registry
+    is the work list, so a new app's kernels join the CI gate by
+    registering, not by editing this file."""
     from repro.core.registry import list_apps
     cases = []
-    for app in list_apps():
-        if app.parity_cases is not None:
-            cases += list(app.parity_cases(tile))
+    for a in list_apps():
+        if app is not None and a.name != app:
+            continue
+        if a.parity_cases is not None:
+            cases += list(a.parity_cases(tile))
     return cases
 
 
-def run_pallas(report, *, tile: int = 128, ports: int = 4, unrolls: int = 8,
+def run_pallas(report, *, app: str | None = None, tile: int = 128,
+               ports: int = 4, unrolls: int = 8,
                reps: int = 3, tol: float = 1e-4) -> int:
-    """Interpret-mode drive of every registered app's Pallas kernels vs
-    their jnp oracles.  Returns the number of parity failures."""
-    lines = [f"# Pallas kernels (all registered apps), interpret mode, "
+    """Interpret-mode drive of the registered Pallas kernels (every
+    app's, or one app's cell) vs their jnp oracles.  Returns the number
+    of parity failures."""
+    lines = [f"# Pallas kernels ({app or 'all registered apps'}), "
+             f"interpret mode, "
              f"tile={tile}, ports={ports}, unrolls={unrolls}",
              "kernel,us_per_call_interpret,max_rel_err"]
     failures = 0
-    for name, fn, oracle, args in _registry_parity_cases(tile):
+    for name, fn, oracle, args in _registry_parity_cases(tile, app):
         got = fn(*args, ports=ports, unrolls=unrolls, use_pallas=True,
                  interpret=True)
         want = oracle(*args)
@@ -83,51 +103,31 @@ def run_pallas(report, *, tile: int = 128, ports: int = 4, unrolls: int = 8,
     return failures
 
 
-def run(report, backend: str = "analytical") -> None:
-    if backend == "pallas":
-        failures = run_pallas(report)
+def run_reference(report, *, app: str, tile: int = 128, ports: int = 2,
+                  unrolls: int = 4, reps: int = 5) -> None:
+    """The analytical cell: every parity case the app registers, timed
+    down its XLA reference path (``use_pallas=False``) — the regression
+    canary for the jnp fallback kernels, registry-driven like the
+    interpret-mode cell."""
+    lines = [f"# {app} kernels, XLA reference path (use_pallas=False), "
+             f"tile={tile}",
+             "kernel,us_per_call_ref"]
+    for name, fn, oracle, args in _registry_parity_cases(tile, app):
+        us = _time(fn, *args, reps=reps, ports=ports, unrolls=unrolls,
+                   use_pallas=False, interpret=False)
+        lines.append(f"{name},{us:.0f}")
+        report.csv(f"{name}_ref", us, "xla_reference")
+    report.write(f"kernels_micro_{app}", lines)
+
+
+def run(report, cell) -> None:
+    if cell.backend == "pallas":
+        failures = run_pallas(report, app=cell.app)
         if failures:
-            raise RuntimeError(f"{failures} WAMI Pallas kernel(s) diverged "
-                               f"from their jnp oracle")
+            raise RuntimeError(f"{failures} {cell.app} Pallas kernel(s) "
+                               f"diverged from their jnp oracle")
         return
-    key = jax.random.PRNGKey(0)
-    lines = ["# kernel micro-benches (CPU XLA reference path)",
-             "kernel,config,us_per_call,gflops_model"]
-
-    from repro.kernels.flash_attention import mha
-    from repro.kernels.ssd_scan import ssd
-    from repro.kernels.wami_gradient import gradient
-
-    B, S, H, K, d = 1, 1024, 8, 2, 64
-    ks = jax.random.split(key, 3)
-    q = jax.random.normal(ks[0], (B, S, H, d))
-    k = jax.random.normal(ks[1], (B, S, K, d))
-    v = jax.random.normal(ks[2], (B, S, K, d))
-    us = _time(mha, q, k, v, use_pallas=False)
-    fl = 4 * B * H * S * S * d / 2          # causal
-    lines.append(f"flash_attention,B{B}xS{S}xH{H}d{d},{us:.0f},"
-                 f"{fl / us / 1e3:.1f}")
-    report.csv("flash_attention_ref", us, f"{fl / us / 1e3:.1f}GFLOPs")
-
-    Bz, S2, H2, P, N = 1, 2048, 8, 64, 64
-    ks = jax.random.split(key, 5)
-    x = jax.random.normal(ks[0], (Bz, S2, H2, P))
-    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S2, H2)))
-    A = -jnp.exp(jax.random.normal(ks[2], (H2,)) * 0.3)
-    Bm = jax.random.normal(ks[3], (Bz, S2, N)) * 0.3
-    Cm = jax.random.normal(ks[4], (Bz, S2, N)) * 0.3
-    us = _time(lambda *a: ssd(*a, use_pallas=False), x, dt, A, Bm, Cm)
-    fl = Bz * S2 * H2 * P * N * 6
-    lines.append(f"ssd_scan,B{Bz}xS{S2}xH{H2}P{P}N{N},{us:.0f},"
-                 f"{fl / us / 1e3:.1f}")
-    report.csv("ssd_scan_ref", us, f"{fl / us / 1e3:.1f}GFLOPs")
-
-    img = jax.random.normal(key, (512, 512))
-    us = _time(lambda im: gradient(im, use_pallas=False), img)
-    lines.append(f"wami_gradient,512x512,{us:.0f},"
-                 f"{512 * 512 * 4 / us / 1e3:.1f}")
-    report.csv("wami_gradient_ref", us, "stencil")
-    report.write("kernels_micro", lines)
+    run_reference(report, app=cell.app)
 
 
 if __name__ == "__main__":
@@ -160,4 +160,7 @@ if __name__ == "__main__":
                   f"diverged from the jnp oracle", file=sys.stderr)
             raise SystemExit(1)
         raise SystemExit(0)
-    run(_Report())
+    from repro.core.registry import list_apps
+    for app in list_apps():
+        if app.parity_cases is not None:
+            run_reference(_Report(), app=app.name)

@@ -18,6 +18,10 @@ from repro.configs import get_config, get_shape
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
 
+# a fixed pseudo-cell: the table derives from the LLM config zoo's
+# committed dry-run artifacts, not from a registered App x Backend pair
+SCENARIOS = {"pairs": (("zoo", "dryrun"),)}
+
 
 def model_flops(arch: str, shape_name: str) -> float:
     cfg = get_config(arch)
@@ -31,7 +35,7 @@ def model_flops(arch: str, shape_name: str) -> float:
     return 2.0 * n * shape.global_batch        # one token per sequence
 
 
-def run(report) -> None:
+def run(report, cell) -> None:
     t0 = time.time()
     lines = ["# Roofline table (per device; v5e: 197TF bf16, 819GB/s HBM, "
              "50GB/s link)",

@@ -1,31 +1,63 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark harness: one module per paper table/figure + framework benches.
+# One bench module per paper table; one cell per app x backend x variant.
+"""Benchmark harness: the registry-driven scenario-matrix runner.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig10]
+    PYTHONPATH=src python -m benchmarks.run                # full matrix
+    PYTHONPATH=src python -m benchmarks.run --list         # enumerate only
+    PYTHONPATH=src python -m benchmarks.run --only fig10
+    PYTHONPATH=src python -m benchmarks.run --app wami --backend pallas
+    PYTHONPATH=src python -m benchmarks.run --cell fig10/wami-pallas-share_plm
+    PYTHONPATH=src python -m benchmarks.run --emit-docs    # docs/matrix.md
 
-Detailed tables land in artifacts/bench/<name>.csv; the stdout CSV is the
-summary line per bench (name, us_per_call, derived metric).
+The matrix is enumerated from each bench's ``SCENARIOS`` table expanded
+against the App/Backend registry (benchmarks/scenarios.py): every
+registered app x backend x variant cell appears exactly once, and cells
+that cannot run are *reported as skipped with a reason*, never silently
+absent.  Unknown ``--only``/``--app``/``--backend``/``--cell`` names
+exit non-zero and list what IS registered (the registry's error style).
+
+Each executed cell writes ``artifacts/bench/<bench>/<app>-<backend>
+[-variant].csv`` plus a machine-readable ``artifacts/bench/matrix.json``
+summary; stdout carries one ``name,us_per_call,derived`` summary row per
+measurement (see docs/benchmarks.md for what ``derived`` means per
+bench).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    from . import scenarios as S
+except ImportError:                      # standalone: python benchmarks/run.py
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import scenarios as S
+
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+DOCS_MD = os.path.join(os.path.dirname(__file__), "..", "docs", "matrix.md")
 
 
 class Report:
-    def __init__(self):
-        os.makedirs(OUT_DIR, exist_ok=True)
+    """Legacy flat report: ``write`` lands ``<out_dir>/<name>.csv``.
+    The standalone bench ``__main__`` blocks still use it."""
+
+    def __init__(self, out_dir: str = OUT_DIR):
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
         self.rows = []
 
+    def _path(self, name: str) -> str:
+        return os.path.join(self.out_dir, f"{name}.csv")
+
     def write(self, name: str, lines):
-        with open(os.path.join(OUT_DIR, f"{name}.csv"), "w") as f:
+        path = self._path(name)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
             f.write("\n".join(lines) + "\n")
 
     def csv(self, name: str, us_per_call: float, derived: str):
@@ -34,56 +66,163 @@ class Report:
         print(row, flush=True)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
-    ap.add_argument("--backend", choices=["analytical", "pallas"],
-                    default="analytical",
-                    help="oracle backend for the benches that support it "
-                         "(fig4, fig10, kernels, fleet — all resolved "
-                         "through the core.registry); pallas replays the "
-                         "checked-in measurement recordings")
-    ap.add_argument("--share-plm", action="store_true",
-                    help="memory-co-design variant for the benches that "
-                         "support it (fig10): tile knob axis + shared-PLM "
-                         "system cost via the core.plm planner")
-    args = ap.parse_args()
+class CellReport(Report):
+    """Per-cell report: every ``write`` routes to the cell's artifact
+    path ``<out_dir>/<bench>/<app>-<backend>[-variant].csv`` (the
+    ``name`` argument is kept for the legacy callers' benefit but does
+    not pick the file)."""
 
-    from . import (autoshard_llm, fig4_motivational, fig10_pareto,
-                   fig11_invocations, fleet_dse, kernels_micro,
-                   roofline_table, table1_characterization)
-    benches = {
-        "fig4": fig4_motivational,
-        "table1": table1_characterization,
-        "fig10": fig10_pareto,
-        "fig11": fig11_invocations,
-        "roofline": roofline_table,
-        "kernels": kernels_micro,
-        "autoshard": autoshard_llm,
-        "fleet": fleet_dse,
-    }
-    report = Report()
+    def __init__(self, cell: S.Cell, out_dir: str = OUT_DIR):
+        super().__init__(out_dir)
+        self.cell = cell
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.out_dir, self.cell.artifact)
+
+
+_PLURAL = {"bench": "benches"}
+
+
+def _unknown(kind: str, bad, valid) -> int:
+    plural = _PLURAL.get(kind, kind + "s")
+    print(f"unknown {kind} {sorted(bad)!r}; registered {plural}: "
+          f"{sorted(valid)}", file=sys.stderr)
+    return 2
+
+
+def _split(values):
+    out = []
+    for v in values or ():
+        out += [p for p in v.split(",") if p]
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="registry-driven scenario-matrix bench runner")
+    ap.add_argument("--list", action="store_true",
+                    help="print the enumerated cell matrix (run/skip + "
+                         "reason) without running anything")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="BENCH", help="run only these benches "
+                    "(repeatable / comma-separated)")
+    ap.add_argument("--app", action="append", default=None,
+                    help="run only cells of these apps")
+    ap.add_argument("--backend", action="append", default=None,
+                    help="run only cells of these backends")
+    ap.add_argument("--cell", action="append", default=None,
+                    metavar="BENCH/APP-BACKEND[-VARIANT]",
+                    help="run exactly these cells (repeatable)")
+    ap.add_argument("--out-dir", default=OUT_DIR,
+                    help="artifact root (default artifacts/bench)")
+    ap.add_argument("--emit-docs", nargs="?", const=DOCS_MD, default=None,
+                    metavar="PATH",
+                    help="regenerate docs/matrix.md from the registry "
+                         "and exit")
+    args = ap.parse_args(argv)
+
+    cells = S.enumerate_matrix()
+
+    # -- filter validation: unknown names are an error, not a no-op ----
+    only = _split(args.only)
+    bad = [b for b in only if b not in S.BENCH_MODULES]
+    if bad:
+        return _unknown("bench", bad, S.BENCH_MODULES)
+    apps_f = _split(args.app)
+    bad = [a for a in apps_f if a not in {sc.cell.app for sc in cells}]
+    if bad:
+        return _unknown("app", bad, {sc.cell.app for sc in cells})
+    backends_f = _split(args.backend)
+    bad = [b for b in backends_f
+           if b not in {sc.cell.backend for sc in cells}]
+    if bad:
+        return _unknown("backend", bad,
+                        {sc.cell.backend for sc in cells})
+    cells_f = _split(args.cell)
+    ids = {sc.cell.id for sc in cells}
+    bad = [c for c in cells_f if c not in ids]
+    if bad:
+        return _unknown("cell", bad, ids)
+
+    if args.emit_docs:
+        # docs describe the whole matrix; filters don't apply here
+        text = S.render_matrix_md(cells)
+        with open(args.emit_docs, "w") as f:
+            f.write(text)
+        print(f"emit-docs: wrote {os.path.relpath(args.emit_docs)} "
+              f"({len(cells)} cells)")
+        return 0
+
+    def selected(sc: S.ScenarioCell) -> bool:
+        c = sc.cell
+        if only and c.bench not in only:
+            return False
+        if apps_f and c.app not in apps_f:
+            return False
+        if backends_f and c.backend not in backends_f:
+            return False
+        if cells_f and c.id not in cells_f:
+            return False
+        return True
+
+    if args.list:
+        subset = [sc for sc in cells if selected(sc)]
+        print(S.render_list(subset))
+        unexplained = [sc.cell.id for sc in subset if not sc.runnable
+                       and not (sc.skip_reason or "").strip()]
+        return 1 if unexplained else 0
+
+    modules = S.bench_modules()
+    out_dir = args.out_dir
     print("name,us_per_call,derived")
     failures = 0
-    for key, mod in benches.items():
-        if args.only and key != args.only:
-            continue
-        try:
-            import inspect
-            params = inspect.signature(mod.run).parameters
-            kw = {}
-            if "backend" in params:
-                kw["backend"] = args.backend
-            if "share_plm" in params and args.share_plm:
-                kw["share_plm"] = True
-            mod.run(report, **kw)
-        except Exception as e:  # noqa: BLE001
-            failures += 1
-            print(f"{key},ERROR,{type(e).__name__}:{e}", flush=True)
-            traceback.print_exc()
-    if failures:
-        raise SystemExit(1)
+    records = []
+    for sc in cells:
+        entry = {"bench": sc.cell.bench, "app": sc.cell.app,
+                 "backend": sc.cell.backend, "variant": sc.cell.variant,
+                 "id": sc.cell.id, "reason": sc.skip_reason}
+        if not selected(sc):
+            entry["status"] = "filtered"
+        elif not sc.runnable:
+            entry["status"] = "skip"
+            if cells_f and sc.cell.id in cells_f:
+                # a cell the caller named explicitly must actually run
+                failures += 1
+                print(f"{sc.cell.id},ERROR,requested cell cannot run: "
+                      f"{sc.skip_reason}", flush=True)
+            else:
+                print(f"# skip {sc.cell.id}: {sc.skip_reason}", flush=True)
+        else:
+            report = CellReport(sc.cell, out_dir)
+            try:
+                modules[sc.cell.bench].run(report, sc.cell)
+                entry["status"] = "run"
+                entry["artifact"] = sc.cell.artifact
+                entry["summary"] = list(report.rows)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                entry["status"] = "error"
+                entry["reason"] = f"{type(e).__name__}:{e}"
+                print(f"{sc.cell.id},ERROR,{type(e).__name__}:{e}",
+                      flush=True)
+                traceback.print_exc()
+        records.append(entry)
+
+    counts = {}
+    for entry in records:
+        counts[entry["status"]] = counts.get(entry["status"], 0) + 1
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "matrix.json"), "w") as f:
+        json.dump({"version": 1,
+                   "generated_by": "python -m benchmarks.run",
+                   "counts": counts, "cells": records},
+                  f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# matrix: " + " ".join(f"{k}={v}"
+                                   for k, v in sorted(counts.items())),
+          flush=True)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

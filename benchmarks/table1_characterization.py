@@ -8,8 +8,12 @@ import time
 from repro.apps.wami import wami_cosmos
 from repro.apps.wami.pipeline import wami_cosmos_no_memory
 
+# the COSMOS-vs-No-Memory span comparison is an analytical-model
+# experiment (the No-Memory ablation has no measured counterpart)
+SCENARIOS = {"apps": ("wami",), "backends": ("analytical",)}
 
-def run(report) -> None:
+
+def run(report, cell) -> None:
     t0 = time.time()
     full = wami_cosmos(delta=0.25)
     nomem = wami_cosmos_no_memory(delta=0.25)

@@ -106,6 +106,49 @@ class App:
         return tuple(t for t in self.recorded_tiles
                      if os.path.exists(self.measurement_path(t)))
 
+    def recording_keys(self) -> List[Tuple[int, str, str, int]]:
+        """Every recording on disk, as ``(tile, device_kind, file,
+        points)`` — the ``(tile, device_kind)`` pairs are exactly the
+        :class:`MeasurementSet` routing keys a measured backend can
+        replay; ``file`` is the store's basename under
+        ``artifacts/measurements/``."""
+        out: List[Tuple[int, str, str, int]] = []
+        if self.measurement_path is None:
+            return out
+        from .pallas_oracle import MeasurementStore
+        for t in self.recorded_tiles:
+            path = self.measurement_path(t)
+            if not os.path.exists(path):
+                continue
+            store = MeasurementStore.load(path)
+            out.append((store.tile or t, store.device_kind,
+                        os.path.basename(path), len(store.entries)))
+        return out
+
+    def describe(self) -> Dict[str, Any]:
+        """The app as a plain dict — what doc generation
+        (``python -m benchmarks.run --emit-docs``) and skip reasons
+        read.  Deterministic: sorted keys, recording basenames only."""
+        return {
+            "name": self.name,
+            "description": self.description,
+            "components": sorted(t.name for t in self.tmg().transitions),
+            "fixed": sorted(self.fixed),
+            "delta": self.delta,
+            "measured": self.kernel_specs is not None,
+            "native_tile": self.native_tile,
+            "recorded_tiles": list(self.recorded_tiles),
+            "available_tiles": list(self.available_tiles()),
+            "recordings": [
+                {"tile": t, "device_kind": kind, "file": name, "points": n}
+                for t, kind, name, n in self.recording_keys()],
+            "plm_planner": self.plm_planner is not None,
+            "plm_tile_sizes": list(self.plm_tile_sizes),
+            "plm_tile_sizes_measured": list(self.plm_tile_sizes_measured),
+            "parity_cases": self.parity_cases is not None,
+            "record_hint": self.record_hint,
+        }
+
     def measurement_set(self, tiles: Optional[Sequence[int]] = None
                         ) -> MeasurementSet:
         """Load the app's recordings for ``tiles`` (default: the app's
@@ -137,6 +180,40 @@ class Backend:
     supports: Callable[[App], bool] = lambda app: True
     supported_tiles: Callable[[App], Tuple[int, ...]] = lambda app: ()
     calibrate: Optional[Callable[[App], Any]] = None
+    # why an unsupported app is unsupported, in the app's terms — the
+    # scenario matrix reports it as the cell's skip reason
+    explain: Optional[Callable[[App], Optional[str]]] = None
+
+    def skip_reason(self, app: App) -> Optional[str]:
+        """``None`` when this backend can drive ``app``; otherwise a
+        non-empty human-readable reason (what the scenario matrix and
+        generated docs print for a skipped cell)."""
+        if self.supports(app):
+            return None
+        if self.explain is not None:
+            reason = self.explain(app)
+            if reason:
+                return reason
+        return (f"backend {self.name!r} does not support app "
+                f"{app.name!r}")
+
+    def describe(self, apps: Optional[Sequence[App]] = None
+                 ) -> Dict[str, Any]:
+        """The backend as a plain dict; with ``apps``, a per-app
+        capability block (supported / tiles / skip reason)."""
+        doc: Dict[str, Any] = {
+            "name": self.name,
+            "description": self.description,
+            "measured": self.measured,
+        }
+        if apps is not None:
+            doc["apps"] = {
+                app.name: {
+                    "supported": self.supports(app),
+                    "tiles": list(self.supported_tiles(app)),
+                    "skip_reason": self.skip_reason(app),
+                } for app in apps}
+        return doc
 
 
 # ----------------------------------------------------------------------
@@ -213,6 +290,18 @@ def _pallas_supports(app: App) -> bool:
     return app.kernel_specs is not None and bool(app.available_tiles())
 
 
+def _pallas_explain(app: App) -> Optional[str]:
+    if app.kernel_specs is None:
+        return (f"app {app.name!r} registers no Pallas kernel specs "
+                f"(no measured surface)")
+    if not app.available_tiles():
+        hint = f"; {app.record_hint}" if app.record_hint else ""
+        return (f"no recording on disk for tiles "
+                f"{list(app.recorded_tiles)} under "
+                f"artifacts/measurements/{hint}")
+    return None
+
+
 def _pallas_tool(app: App, *, share_plm: bool = False,
                  tiles: Optional[Sequence[int]] = None,
                  mode: str = "replay", missing: Optional[str] = None,
@@ -276,6 +365,7 @@ register_backend(Backend(
     supports=_pallas_supports,
     supported_tiles=lambda app: app.available_tiles(),
     calibrate=_pallas_calibrate,
+    explain=_pallas_explain,
 ))
 
 

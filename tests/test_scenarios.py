@@ -1,0 +1,276 @@
+"""The registry-driven scenario sweep (benchmarks/scenarios.py + run.py):
+
+  (a) every registered app x backend pair appears in the enumerated
+      matrix exactly once per supporting bench (and at least once
+      overall — the kernels bench spans the full wildcard product);
+  (b) cells that cannot run carry a non-empty skip reason, and the
+      registry's capability introspection explains *why*;
+  (c) ``--list`` is deterministic and byte-stable across two runs, and
+      unknown ``--only``/``--cell`` names exit non-zero listing what IS
+      registered;
+  (d) the fig10 cells (analytical, and the share-plm variant that
+      replaced the old ``--share-plm`` global flag) stay byte-identical
+      to their PR-4 flat artifacts under ``artifacts/bench/``.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from benchmarks import scenarios as S               # noqa: E402
+from benchmarks.scenarios import Cell               # noqa: E402
+
+
+def _cli(*argv, timeout=300):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-m", "benchmarks.run", *argv],
+                          cwd=REPO, env=env, capture_output=True,
+                          text=True, timeout=timeout)
+
+
+# ----------------------------------------------------------------------
+# (a) the matrix covers every registered pair, exactly once per bench
+# ----------------------------------------------------------------------
+def test_every_registered_pair_once_per_supporting_bench():
+    from repro.core.registry import list_apps, list_backends
+    cells = S.enumerate_matrix()
+    mods = S.bench_modules()
+    app_names = [a.name for a in list_apps()]
+    backend_names = [b.name for b in list_backends()]
+    for bench, mod in mods.items():
+        spec = mod.SCENARIOS
+        if "pairs" in spec:
+            continue
+        apps = app_names if spec["apps"] == "*" else list(spec["apps"])
+        bks = (backend_names if spec["backends"] == "*"
+               else list(spec["backends"]))
+        for a in apps:
+            for b in bks:
+                hits = [sc for sc in cells
+                        if sc.cell == Cell(bench, a, b, "")]
+                assert len(hits) == 1, (bench, a, b, hits)
+    # the kernels bench is the full wildcard product, so every
+    # registered pair is enumerated at least once overall
+    for a in app_names:
+        for b in backend_names:
+            assert any(sc.cell.app == a and sc.cell.backend == b
+                       for sc in cells), (a, b)
+
+
+def test_matrix_enumeration_is_deterministic_in_process():
+    first = S.enumerate_matrix()
+    second = S.enumerate_matrix()
+    assert first == second
+    ids = [sc.cell.id for sc in first]
+    assert len(ids) == len(set(ids)), "duplicate cell ids"
+
+
+# ----------------------------------------------------------------------
+# (b) unsupported cells carry a reason; the registry explains why
+# ----------------------------------------------------------------------
+def _toy_app():
+    from repro.core.hlsim import HLSTool
+    from repro.core.knobs import KnobSpace
+    from repro.core.registry import App
+    from repro.core.tmg import pipeline_tmg
+    return App(
+        name="toy-scenarios-test",
+        description="two-stage toy without a measured surface",
+        tmg=lambda: pipeline_tmg(["a", "b"]),
+        knob_spaces=lambda **_: {n: KnobSpace(clock_ns=1.0, max_ports=2,
+                                              max_unrolls=4)
+                                 for n in ("a", "b")},
+        analytical=lambda: HLSTool({}),
+    )
+
+
+def test_unsupported_cells_carry_skip_reason():
+    from repro.core.registry import _APPS, get_backend, register_app
+    toy = _toy_app()
+    try:
+        register_app(toy)
+        cells = S.enumerate_matrix()
+        toy_cells = [sc for sc in cells
+                     if sc.cell.app == "toy-scenarios-test"]
+        # the wildcard kernels bench must enumerate the new app...
+        assert {sc.cell.bench for sc in toy_cells} >= {"kernels"}
+        # ...and every cell it cannot run is skipped WITH a reason
+        for sc in toy_cells:
+            assert not sc.runnable, sc
+            assert sc.skip_reason and sc.skip_reason.strip(), sc
+        # registry-level introspection: pallas explains itself
+        reason = get_backend("pallas").skip_reason(toy)
+        assert reason and "kernel specs" in reason
+        assert get_backend("analytical").skip_reason(toy) is None
+    finally:
+        _APPS.pop("toy-scenarios-test", None)
+
+
+def test_pallas_explains_missing_recording():
+    from repro.core.registry import get_backend
+    import dataclasses
+    toy = dataclasses.replace(
+        _toy_app(), kernel_specs=lambda tile: {},
+        measurement_path=lambda t: os.path.join(REPO, "artifacts",
+                                                "measurements",
+                                                f"nonexistent_{t}.json"),
+        recorded_tiles=(32,), record_hint="re-record with `toy --record`")
+    reason = get_backend("pallas").skip_reason(toy)
+    assert reason and "no recording on disk" in reason
+    assert "toy --record" in reason          # the re-record command
+
+
+def test_every_skip_in_the_real_matrix_is_explained():
+    for sc in S.enumerate_matrix():
+        if not sc.runnable:
+            assert sc.skip_reason and sc.skip_reason.strip(), sc
+
+
+def test_backend_describe_carries_capability_block():
+    from repro.core.registry import get_backend, list_apps
+    doc = get_backend("pallas").describe(list_apps())
+    assert doc["measured"] is True
+    assert doc["apps"]["wami"]["supported"] is True
+    assert 128 in doc["apps"]["wami"]["tiles"]
+    wami = [a for a in list_apps() if a.name == "wami"][0].describe()
+    assert wami["measured"] and wami["plm_planner"]
+    keys = {(r["tile"], r["device_kind"]) for r in wami["recordings"]}
+    assert (128, "interpret") in keys
+
+
+# ----------------------------------------------------------------------
+# (c) --list is byte-stable; unknown names error out loudly
+# ----------------------------------------------------------------------
+def test_list_is_deterministic_and_byte_stable():
+    r1 = _cli("--list")
+    r2 = _cli("--list")
+    assert r1.returncode == 0, r1.stderr
+    assert r1.stdout == r2.stdout
+    lines = r1.stdout.splitlines()
+    assert lines[0] == "cell,status,reason"
+    assert any(line.startswith("fig10/wami-pallas-share_plm,")
+               for line in lines)
+    assert lines[-1].endswith("0 unexplained")
+
+
+def test_unknown_names_exit_nonzero_and_list_valid():
+    r = _cli("--only", "nonesuch")
+    assert r.returncode != 0
+    assert "nonesuch" in r.stderr and "fig10" in r.stderr
+    r = _cli("--cell", "bogus/none-such")
+    assert r.returncode != 0
+    assert "fig4/wami-analytical" in r.stderr
+    r = _cli("--backend", "verilog")
+    assert r.returncode != 0
+    assert "analytical" in r.stderr and "pallas" in r.stderr
+
+
+def test_runner_writes_cell_artifact_and_matrix_json(tmp_path):
+    from benchmarks import run as harness
+    rc = harness.main(["--cell", "autoshard/zoo-analytical",
+                       "--out-dir", str(tmp_path)])
+    assert rc == 0
+    assert (tmp_path / "autoshard" / "zoo-analytical.csv").exists()
+    doc = json.loads((tmp_path / "matrix.json").read_text())
+    by_id = {c["id"]: c for c in doc["cells"]}
+    ran = by_id["autoshard/zoo-analytical"]
+    assert ran["status"] == "run"
+    assert ran["artifact"] == os.path.join("autoshard",
+                                           "zoo-analytical.csv")
+    assert ran["summary"]                       # the stdout csv rows
+    others = [c for c in doc["cells"] if c["id"] != ran["id"]]
+    assert others and all(c["status"] == "filtered" for c in others)
+
+
+def test_list_honours_filters(capsys):
+    from benchmarks import run as harness
+    rc = harness.main(["--list", "--only", "fig10"])
+    assert rc == 0
+    lines = capsys.readouterr().out.splitlines()
+    body = [ln for ln in lines[1:] if not ln.startswith("#")]
+    assert body and all(ln.startswith("fig10/") for ln in body)
+
+
+def test_explicitly_requested_unrunnable_cell_fails(tmp_path):
+    from benchmarks import run as harness
+    from repro.core.registry import _APPS, register_app
+    toy = _toy_app()
+    try:
+        register_app(toy)
+        # the wildcard kernels bench enumerates the toy app; naming its
+        # (skipped) cell explicitly must exit non-zero, not silently 0
+        rc = harness.main(["--cell",
+                           "kernels/toy-scenarios-test-analytical",
+                           "--out-dir", str(tmp_path)])
+        assert rc != 0
+    finally:
+        _APPS.pop("toy-scenarios-test", None)
+
+
+def test_matrix_md_is_fresh():
+    """docs/matrix.md must match a regeneration from the live registry
+    (the CI scenario-matrix job enforces the same on every PR)."""
+    want = S.render_matrix_md()
+    with open(os.path.join(REPO, "docs", "matrix.md")) as f:
+        got = f.read()
+    assert got == want, ("docs/matrix.md is stale — regenerate with "
+                         "`python -m benchmarks.run --emit-docs`")
+
+
+# ----------------------------------------------------------------------
+# (d) fig10 cells == the PR-4 flag-path outputs, byte for byte
+# ----------------------------------------------------------------------
+class _CaptureReport:
+    def __init__(self):
+        self.lines = None
+
+    def write(self, name, lines):
+        self.lines = list(lines)
+
+    def csv(self, *args, **kwargs):
+        pass
+
+
+def _cell_lines(mod, cell) -> str:
+    report = _CaptureReport()
+    mod.run(report, cell)
+    assert report.lines is not None
+    return "\n".join(report.lines) + "\n"
+
+
+def _committed_artifact(*parts) -> str:
+    with open(os.path.join(REPO, "artifacts", "bench", *parts)) as f:
+        return f.read()
+
+
+def test_fig10_share_plm_cell_matches_pr4_flag_path():
+    # fig10_pareto_pallas_share_plm.csv is the committed output of the
+    # old `--share-plm` global-flag path (PR 3/4 era) — the variant
+    # cell that replaced the flag must reproduce it byte for byte
+    from benchmarks import fig10_pareto
+    got = _cell_lines(fig10_pareto,
+                      Cell("fig10", "wami", "pallas", "share_plm"))
+    assert got == _committed_artifact("fig10_pareto_pallas_share_plm.csv")
+
+
+def test_fig10_analytical_cell_matches_committed_reference():
+    from benchmarks import fig10_pareto
+    got = _cell_lines(fig10_pareto, Cell("fig10", "wami", "analytical"))
+    assert got == _committed_artifact("fig10", "wami-analytical.csv")
+
+
+@pytest.mark.slow
+def test_fig10_analytical_share_plm_cell_matches_pr4_flag_path():
+    from benchmarks import fig10_pareto
+    got = _cell_lines(fig10_pareto,
+                      Cell("fig10", "wami", "analytical", "share_plm"))
+    assert got == _committed_artifact("fig10_pareto_share_plm.csv")
