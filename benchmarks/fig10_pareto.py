@@ -34,13 +34,37 @@ def _share_plm_result(backend: str, workers: int = 8):
     """Registry-resolved: ``build_session("wami", backend,
     share_plm=True)``.  The measured drive goes through the classic
     :func:`wami_plm_session` wrapper (same ``build_session`` call
-    underneath) so its measured-tiles default stays in one place."""
+    underneath) so its measured-tiles default stays in one place.
+    ``verify_plans=True`` makes the map phase a strict gate: every
+    emitted memory plan is independently re-proved race-free by
+    ``repro.core.analysis.verify`` before it lands in the report."""
     if backend == "pallas":
         from repro.apps.wami.pallas import wami_plm_session
-        return wami_plm_session(0.25, workers=workers).run()
+        return wami_plm_session(0.25, workers=workers,
+                                verify_plans=True).run()
     from repro.core.registry import build_session
     return build_session("wami", backend, share_plm=True,
-                         workers=workers).run()
+                         workers=workers, verify_plans=True).run()
+
+
+def _plans_doc(res) -> dict:
+    """The committed ``*.plans.json`` sidecar: every mapped point's
+    memory plan plus the LP schedule it conditions on, in the format
+    ``python -m repro.core.analysis.verify`` re-proves (the artifact is
+    the cross-environment source of truth — the verifier never re-runs
+    the session)."""
+    from repro.core.plm.spec import memory_plan_to_json
+    points = []
+    for m in sorted(res.mapped, key=lambda m: m.theta_planned):
+        if m.memory_plan is None:
+            continue
+        points.append({
+            "theta_planned": m.theta_planned,
+            "schedule": (m.schedule.to_json()
+                         if m.schedule is not None else None),
+            "plan": memory_plan_to_json(m.memory_plan),
+        })
+    return {"app": "wami", "points": points}
 
 
 def run(report, cell) -> None:
@@ -93,6 +117,8 @@ def run(report, cell) -> None:
     name = ("fig10_pareto" if backend == "analytical"
             else f"fig10_pareto_{backend}") + suffix
     report.write(name, lines)
+    if share_plm and hasattr(report, "write_json"):
+        report.write_json(name, _plans_doc(res))
     report.csv(name, wall * 1e6,
                f"points={len(res.mapped)}_median_sigma="
                f"{statistics.median(sigmas):.1f}pct")

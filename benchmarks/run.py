@@ -60,6 +60,19 @@ class Report:
         with open(path, "w") as f:
             f.write("\n".join(lines) + "\n")
 
+    def write_json(self, name: str, doc, *, kind: str = "plans") -> str:
+        """Sidecar JSON artifact next to the cell's CSV (same basename,
+        ``.<kind>.json`` extension) — e.g. the committed memory-plan
+        records ``python -m repro.core.analysis.verify`` re-proves.
+        Deterministic bytes: sorted keys, fixed indent."""
+        base, _ = os.path.splitext(self._path(name))
+        path = f"{base}.{kind}.json"
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        return path
+
     def csv(self, name: str, us_per_call: float, derived: str):
         row = f"{name},{us_per_call:.1f},{derived}"
         self.rows.append(row)

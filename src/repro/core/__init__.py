@@ -28,6 +28,9 @@ over a batched synthesis oracle:
   * :mod:`repro.core.registry` — the App/Backend registry: one entry
     point (``get_app``/``get_backend``/``build_session``) for every
     workload x oracle pair (docs/backends.md)
+  * :mod:`repro.core.analysis` — schedule-aware static analysis: busy
+    intervals + two-tier non-concurrency certificates, the independent
+    PLM-plan race detector, and the repo lint driver (docs/analysis.md)
 """
 
 from .characterize import CharacterizationResult, characterize_component, spans
@@ -55,8 +58,9 @@ from .registry import (App, Backend, build_session, build_tool, get_app,
 from .pareto import (DesignPoint, check_delta_curve, dominates_max_min,
                      dominates_min_min, pareto_front_max_min,
                      pareto_front_min_min, span)
-from .planning import (ComponentModel, PiecewiseLinearCost, PlanPoint, plan,
-                       sweep, theta_bounds)
+from .planning import (ComponentModel, PiecewiseLinearCost, PlanPoint,
+                       Schedule, plan, sweep, theta_bounds)
+from .plm.compat import CompatSource
 from .session import ExplorationSession, ProgressEvent
 from .tmg import TMG, Place, Transition, feedback_pipeline_tmg, pipeline_tmg
 
@@ -80,9 +84,30 @@ __all__ = [
     "ExplorationSession", "ProgressEvent",
     "ComponentSpec", "LoopNest", "HLSTool", "MemGen", "PLM", "PLMSpec",
     "CharacterizationResult", "characterize_component", "spans",
-    "ComponentModel", "PiecewiseLinearCost", "PlanPoint", "plan", "sweep",
-    "theta_bounds",
+    "ComponentModel", "PiecewiseLinearCost", "PlanPoint", "Schedule",
+    "plan", "sweep", "theta_bounds",
+    "BusyInterval", "ScheduleCertificate", "schedule_exclusive_pairs",
+    "compat_source_for", "CompatSource", "Violation",
+    "PlanVerificationError", "verify_plan",
     "phi", "map_target", "MapOutcome",
     "cosmos_dse", "CosmosResult", "exhaustive_dse", "ExhaustiveResult",
     "compose_exhaustive", "SystemPoint",
 ]
+
+
+# the static-analysis layer is exported lazily: its verify/lint modules
+# are also `python -m` entry points, and importing them eagerly here
+# would mean every `python -m repro.core.analysis.verify` run imports
+# the module twice (runpy's double-import warning)
+_ANALYSIS_LAZY = {
+    "BusyInterval", "ScheduleCertificate", "schedule_exclusive_pairs",
+    "compat_source_for", "Violation", "PlanVerificationError",
+    "verify_plan",
+}
+
+
+def __getattr__(name):
+    if name in _ANALYSIS_LAZY:
+        from . import analysis
+        return getattr(analysis, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

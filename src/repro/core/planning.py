@@ -31,6 +31,7 @@ from .tmg import TMG
 __all__ = [
     "PiecewiseLinearCost",
     "ComponentModel",
+    "Schedule",
     "PlanPoint",
     "theta_bounds",
     "plan",
@@ -120,12 +121,51 @@ class ComponentModel:
 
 
 @dataclass(frozen=True)
+class Schedule:
+    """The periodic schedule the LP solved for: firing k of transition i
+    starts at ``sigma[i] + k * period`` and holds its resources for
+    ``tau[i]``.  Admissibility is exactly the Eq. (2) place constraints,
+    so a returned Schedule is always a feasible steady-state execution
+    of the TMG at throughput ``theta``.
+
+    The schedule used to be solved and discarded; it is now first-class
+    because the static-analysis layer (:mod:`repro.core.analysis`)
+    derives schedule-conditional non-concurrency certificates from the
+    busy intervals ``[sigma_i, sigma_i + tau_i) mod period``.
+    """
+
+    theta: float
+    sigma: Dict[str, float]           # transition initiation offsets (s)
+    tau: Dict[str, float]             # planned firing delays (s)
+
+    @property
+    def period(self) -> float:
+        return 1.0 / self.theta
+
+    def tag(self) -> str:
+        """A short stable identifier of the design point this schedule
+        (and any certificate derived from it) holds under."""
+        return f"theta={self.theta:.9g}"
+
+    def to_json(self) -> Dict[str, object]:
+        return {"theta": self.theta, "sigma": dict(self.sigma),
+                "tau": dict(self.tau)}
+
+    @staticmethod
+    def from_json(d: Dict[str, object]) -> "Schedule":
+        return Schedule(theta=float(d["theta"]),
+                        sigma={k: float(v) for k, v in d["sigma"].items()},
+                        tau={k: float(v) for k, v in d["tau"].items()})
+
+
+@dataclass(frozen=True)
 class PlanPoint:
     """One LP solution along the theta sweep (a 'planned point', Fig. 10)."""
 
     theta: float
     cost: float                       # sum_i f_i(tau_i): theoretical area
     lam_targets: Dict[str, float]     # per-component latency requirements
+    schedule: Optional[Schedule] = None   # the solved sigma/tau behind it
 
 
 # ----------------------------------------------------------------------
@@ -280,9 +320,11 @@ def plan(tmg: TMG, models: Dict[str, ComponentModel], theta: float
     x = _solve_lp(c, A_ub, b_ub, bounds)
     if x is None:
         return None
+    sigma = {nme: float(x[i]) for i, nme in enumerate(names)}
     tau = {nme: float(x[n + i]) for i, nme in enumerate(names)}
     cost = float(sum(models[nme].cost(tau[nme]) for nme in names))
-    return PlanPoint(theta=theta, cost=cost, lam_targets=tau)
+    return PlanPoint(theta=theta, cost=cost, lam_targets=tau,
+                     schedule=Schedule(theta=theta, sigma=sigma, tau=tau))
 
 
 def sweep(tmg: TMG, models: Dict[str, ComponentModel], delta: float,

@@ -24,7 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..knobs import Synthesis
 from ..memgen import MemGen, PLMSpec
 from ..tmg import TMG
-from .compat import MemoryCompatGraph
+from .compat import CompatSource, MemoryCompatGraph
 from .spec import (MemoryGroup, MemoryPlan, PLMRequirement,
                    requirement_from_synthesis)
 
@@ -73,7 +73,8 @@ class PLMPlanner:
 
     def __init__(self, tmg: TMG, *, memgen: Optional[MemGen] = None,
                  exclude: Sequence[str] = ()):
-        self.compat = MemoryCompatGraph(tmg)
+        self.tmg = tmg
+        self.compat = MemoryCompatGraph.for_tmg(tmg)   # built once per TMG
         self.memgen = memgen or MemGen()
         self.exclude = frozenset(exclude)
 
@@ -102,7 +103,8 @@ class PLMPlanner:
             out.append(req)
         return out
 
-    def plan(self, requirements: Sequence[PLMRequirement]) -> MemoryPlan:
+    def plan(self, requirements: Sequence[PLMRequirement],
+             compat: Optional[CompatSource] = None) -> MemoryPlan:
         """Greedy grouping with a strict benefit guard.
 
         Requirements are seeded largest-first; each one joins the first
@@ -111,7 +113,13 @@ class PLMPlanner:
         exceed the group's current area plus the requirement's private
         PLM — otherwise it opens its own group.  Capacity-0
         requirements are unsplittable and always stay alone.
+
+        ``compat`` overrides the planner's structural certificate source
+        (e.g. a two-tier :class:`CompatSource` carrying
+        schedule-conditional pairs); the plan records the source's tag.
         """
+        source = compat if compat is not None else self.compat
+        tag = getattr(source, "tag", None)
         order = sorted(requirements,
                        key=lambda r: (-r.area_plm, r.component))
         groups: List[List[PLMRequirement]] = []
@@ -132,7 +140,7 @@ class PLMPlanner:
                 for g in groups:
                     if g[0].unit != req.unit or g[0].capacity <= 0:
                         continue
-                    if not self.compat.cliques_containing(
+                    if not source.cliques_containing(
                             tuple(m.component for m in g), req.component):
                         continue
                     if price(g + [req]) <= price(g) + req.area_plm:
@@ -155,15 +163,35 @@ class PLMPlanner:
                 members=tuple(sorted(r.component for r in g)),
                 capacity=cap, word_bits=bits, ports=ports,
                 area=area, area_private=private, unit=g[0].unit,
-                banks=banks))
+                banks=banks,
+                requirements=tuple(sorted(
+                    g, key=lambda r: r.component))))
             logic += sum(r.area_logic for r in g)
         return MemoryPlan(groups=tuple(out),
                           area_memory=sum(gr.area for gr in out),
-                          area_logic=logic)
+                          area_logic=logic, compat_tag=tag)
 
     # ------------------------------------------------------------------
-    def plan_point(self, tool, syntheses: Dict[str, Synthesis]
-                   ) -> MemoryPlan:
+    def plan_point(self, tool, syntheses: Dict[str, Synthesis],
+                   schedule=None) -> MemoryPlan:
         """requirements + plan in one call (what the session's map phase
-        invokes per design point)."""
-        return self.plan(self.requirements(tool, syntheses))
+        invokes per design point).
+
+        ``schedule`` (a :class:`~repro.core.planning.Schedule`) opens
+        the second certificate tier: busy-interval analysis of the LP
+        solution certifies pairs beyond the structural one-token cycles
+        (:mod:`repro.core.analysis.intervals`).  Both the structural-only
+        and the two-tier plan are computed and the cheaper one wins
+        (ties go structural), so the schedule-aware front is *pointwise*
+        no worse than the structural-only front — the same dominance
+        argument the benefit guard makes against the private sum.
+        """
+        reqs = self.requirements(tool, syntheses)
+        base = self.plan(reqs)
+        if schedule is None:
+            return base
+        from ..analysis.intervals import compat_source_for
+        sched_plan = self.plan(reqs, compat_source_for(self.tmg, schedule))
+        if sched_plan.system_cost < base.system_cost:
+            return sched_plan
+        return base

@@ -18,13 +18,14 @@ exchange rate that brings a mixed system onto a single unit first.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional, Tuple
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, Optional, Tuple
 
 from ..knobs import Synthesis
 
 __all__ = ["PLMRequirement", "MemoryGroup", "MemoryPlan",
-           "requirement_from_synthesis"]
+           "requirement_from_synthesis",
+           "memory_plan_to_json", "memory_plan_from_json"]
 
 
 @dataclass(frozen=True)
@@ -55,7 +56,10 @@ class MemoryGroup:
     ``area`` is the shared PLM's area; ``area_private`` what the same
     members would cost as private copies (the per-component sum).  The
     planner only forms groups with ``area <= area_private``, so
-    ``saved`` is never negative.
+    ``saved`` is never negative.  ``requirements`` keeps the member
+    requirements the group was formed from, so the independent race
+    detector (:mod:`repro.core.analysis.verify`) can re-derive the
+    shared envelope without trusting the planner.
     """
 
     members: Tuple[str, ...]
@@ -66,6 +70,7 @@ class MemoryGroup:
     area_private: float
     unit: str = "mm2"
     banks: int = 0
+    requirements: Tuple["PLMRequirement", ...] = ()
 
     @property
     def saved(self) -> float:
@@ -74,11 +79,19 @@ class MemoryGroup:
 
 @dataclass(frozen=True)
 class MemoryPlan:
-    """The planned system memory subsystem for one mapped design point."""
+    """The planned system memory subsystem for one mapped design point.
+
+    ``compat_tag`` records which certificate tier formed the plan's
+    groups: ``None`` for structural-only compatibility, otherwise the
+    :meth:`~repro.core.planning.Schedule.tag` of the schedule whose
+    conditional certificates the planner consumed — the plan's sharing
+    is only sound while the system runs that schedule.
+    """
 
     groups: Tuple[MemoryGroup, ...]
     area_memory: float            # sum of group areas (shared banks)
     area_logic: float             # sum of per-component datapath areas
+    compat_tag: Optional[str] = None
 
     @property
     def system_cost(self) -> float:
@@ -98,6 +111,40 @@ class MemoryPlan:
             if component in g.members:
                 return g
         return None
+
+
+def memory_plan_to_json(plan: MemoryPlan) -> Dict[str, Any]:
+    """The plan as a plain dict — what benchmark artifacts commit so the
+    independent verifier (:mod:`repro.core.analysis.verify`) can re-prove
+    an emitted plan without re-running the planner."""
+    return {
+        "compat_tag": plan.compat_tag,
+        "area_memory": plan.area_memory,
+        "area_logic": plan.area_logic,
+        "groups": [
+            {"members": list(g.members), "capacity": g.capacity,
+             "word_bits": g.word_bits, "ports": g.ports, "area": g.area,
+             "area_private": g.area_private, "unit": g.unit,
+             "banks": g.banks,
+             "requirements": [asdict(r) for r in g.requirements]}
+            for g in plan.groups],
+    }
+
+
+def memory_plan_from_json(d: Dict[str, Any]) -> MemoryPlan:
+    groups = tuple(
+        MemoryGroup(
+            members=tuple(g["members"]), capacity=int(g["capacity"]),
+            word_bits=int(g["word_bits"]), ports=int(g["ports"]),
+            area=float(g["area"]), area_private=float(g["area_private"]),
+            unit=g["unit"], banks=int(g.get("banks", 0)),
+            requirements=tuple(PLMRequirement(**r)
+                               for r in g.get("requirements", ())))
+        for g in d["groups"])
+    return MemoryPlan(groups=groups,
+                      area_memory=float(d["area_memory"]),
+                      area_logic=float(d["area_logic"]),
+                      compat_tag=d.get("compat_tag"))
 
 
 def requirement_from_synthesis(component: str, synth: Synthesis, *,

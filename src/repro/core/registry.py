@@ -387,6 +387,7 @@ def build_session(app: App | str, backend: Backend | str = "analytical",
                   tile_sizes: Optional[Sequence[int]] = None,
                   tiles: Optional[Sequence[int]] = None,
                   tool: Any = None,
+                  verify_plans: bool = False,
                   **kwargs: Any) -> ExplorationSession:
     """Build the :class:`ExplorationSession` for any registered
     workload x oracle pair.
@@ -395,8 +396,13 @@ def build_session(app: App | str, backend: Backend | str = "analytical",
     axis (``tile_sizes`` overrides the app's per-backend default);
     ``tiles`` selects which recordings a measured backend loads
     (default: the app's ``default_tiles``); ``tool`` injects a
-    pre-built oracle (skipping the backend factory).  Remaining
-    keywords flow to :class:`ExplorationSession`.
+    pre-built oracle (skipping the backend factory).
+    ``verify_plans=True`` turns on the strict map-phase post-pass:
+    every memory plan the planner emits is independently re-proved
+    race-free, capacity-feasible, and dominance-guarded by
+    :mod:`repro.core.analysis.verify` before the session accepts it
+    (only meaningful together with ``share_plm``).  Remaining keywords
+    flow to :class:`ExplorationSession`.
     """
     app = get_app(app) if isinstance(app, str) else app
     backend = get_backend(backend) if isinstance(backend, str) else backend
@@ -413,4 +419,5 @@ def build_session(app: App | str, backend: Backend | str = "analytical",
     return ExplorationSession(app.tmg(), tool, spaces,
                               delta=app.delta if delta is None else delta,
                               fixed=dict(app.fixed), workers=workers,
+                              verify_plans=verify_plans,
                               **kwargs)

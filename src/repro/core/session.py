@@ -38,7 +38,7 @@ from .knobs import CDFGFacts, KnobSpace, Region
 from .mapping import MapOutcome, map_target
 from .oracle import OracleCache, OracleLedger
 from .pareto import DesignPoint, pareto_front_max_min
-from .planning import ComponentModel, PlanPoint, sweep, theta_bounds
+from .planning import ComponentModel, PlanPoint, Schedule, sweep, theta_bounds
 from .tmg import TMG
 
 __all__ = ["SystemPoint", "CosmosResult", "ProgressEvent",
@@ -64,6 +64,10 @@ class SystemPoint:
     outcomes: Tuple[MapOutcome, ...]
     cost_unshared: Optional[float] = None
     plm_groups: Tuple[Tuple[str, ...], ...] = ()
+    # the full emitted plan (None without a planner) — what benchmarks
+    # commit as *.plans.json and the analysis verifier re-proves
+    memory_plan: Optional[Any] = None
+    schedule: Optional[Schedule] = None
 
     @property
     def sigma_mismatch(self) -> float:
@@ -161,13 +165,19 @@ def _char_from_json(d: Dict[str, Any]) -> CharacterizationResult:
 
 
 def _plan_to_json(p: PlanPoint) -> Dict[str, Any]:
-    return {"theta": p.theta, "cost": p.cost,
-            "lam_targets": dict(p.lam_targets)}
+    out = {"theta": p.theta, "cost": p.cost,
+           "lam_targets": dict(p.lam_targets)}
+    if p.schedule is not None:
+        out["schedule"] = p.schedule.to_json()
+    return out
 
 
 def _plan_from_json(d: Dict[str, Any]) -> PlanPoint:
+    sched = d.get("schedule")     # pre-schedule snapshots: None
+    if sched is not None:
+        sched = Schedule.from_json(sched)
     return PlanPoint(theta=d["theta"], cost=d["cost"],
-                     lam_targets=dict(d["lam_targets"]))
+                     lam_targets=dict(d["lam_targets"]), schedule=sched)
 
 
 # ----------------------------------------------------------------------
@@ -186,7 +196,14 @@ class ExplorationSession:
     ``memory_planner`` (a :class:`~repro.core.plm.planner.PLMPlanner`)
     replaces the map phase's naive per-component cost sum with the
     planned shared-PLM system cost; the naive sum is kept on every
-    :class:`SystemPoint` as ``cost_unshared``.
+    :class:`SystemPoint` as ``cost_unshared``.  Each plan point's solved
+    LP schedule is handed to the planner (when its ``plan_point``
+    accepts one), opening the schedule-conditional certificate tier.
+    ``verify_plans=True`` adds a strict post-pass: every emitted memory
+    plan is independently re-proved race-free by
+    :mod:`repro.core.analysis.verify`, and the session raises
+    :class:`~repro.core.analysis.verify.PlanVerificationError` on the
+    first violation instead of returning an unsound point.
     """
 
     def __init__(self, tmg: TMG, tool, spaces: Dict[str, KnobSpace], *,
@@ -196,6 +213,7 @@ class ExplorationSession:
                  cache: Optional[OracleCache] = None,
                  workers: int = 1,
                  memory_planner=None,
+                 verify_plans: bool = False,
                  on_event: Optional[Callable[[ProgressEvent], None]] = None):
         self.tmg = tmg
         self.spaces = dict(spaces)
@@ -203,6 +221,7 @@ class ExplorationSession:
         self.fixed = dict(fixed or {})
         self.workers = max(1, int(workers))
         self.memory_planner = memory_planner
+        self.verify_plans = bool(verify_plans)
         self.on_event = on_event
         if ledger is not None:
             if cache is not None:
@@ -319,10 +338,9 @@ class ExplorationSession:
                 cost_naive += out.synthesis.area
             theta_actual = self.tmg.throughput(lam_actual)
             cost_actual, cost_unshared, groups = cost_naive, None, ()
+            mem = None
             if self.memory_planner is not None:
-                mem = self.memory_planner.plan_point(
-                    self.ledger, {o.component: o.synthesis
-                                  for o in outcomes})
+                mem = self._plan_memory(plan_pt, outcomes)
                 cost_actual = mem.system_cost
                 cost_unshared = cost_naive
                 groups = tuple(g.members for g in mem.groups
@@ -338,10 +356,32 @@ class ExplorationSession:
                                cost_actual=cost_actual,
                                outcomes=tuple(outcomes),
                                cost_unshared=cost_unshared,
-                               plm_groups=groups)
+                               plm_groups=groups,
+                               memory_plan=mem,
+                               schedule=plan_pt.schedule)
 
         self.mapped = self._pool_map(one, planned)
         return self.mapped
+
+    def _plan_memory(self, plan_pt: PlanPoint,
+                     outcomes: Sequence[MapOutcome]):
+        """Run the memory planner for one mapped point, handing it the
+        plan point's LP schedule when the planner can take one, and —
+        under ``verify_plans`` — re-proving the emitted plan sound."""
+        import inspect
+        synths = {o.component: o.synthesis for o in outcomes}
+        planner = self.memory_planner
+        takes_schedule = ("schedule"
+                          in inspect.signature(planner.plan_point).parameters)
+        if takes_schedule:
+            mem = planner.plan_point(self.ledger, synths,
+                                     schedule=plan_pt.schedule)
+        else:                      # pre-schedule custom planners
+            mem = planner.plan_point(self.ledger, synths)
+        if self.verify_plans:
+            from .analysis.verify import assert_plan_sound
+            assert_plan_sound(mem, self.tmg, plan_pt.schedule)
+        return mem
 
     # -- results -------------------------------------------------------
     def run(self) -> CosmosResult:

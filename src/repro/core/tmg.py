@@ -77,6 +77,10 @@ class TMG:
         self._succ: Dict[str, List[Place]] = {t.name: [] for t in self.transitions}
         for p in self.places:
             self._succ[p.src].append(p)
+        # lazily-filled cycle cache: the structure is immutable after
+        # construction and every consumer (throughput, compat graphs,
+        # certificates) re-enumerates the same cycles otherwise
+        self._cycles: List[List[Place]] = None  # type: ignore[assignment]
 
     # ------------------------------------------------------------------
     # Structure
@@ -126,8 +130,11 @@ class TMG:
         """Enumerate simple cycles (as place lists) via DFS (Johnson-lite).
 
         Graphs here are tiny; an exponential enumerator is fine and keeps
-        the code auditable.
+        the code auditable.  The result is computed once per TMG and
+        cached — callers must not mutate the returned lists.
         """
+        if self._cycles is not None:
+            return self._cycles
         cycles: List[List[Place]] = []
         seen_keys = set()
 
@@ -149,6 +156,7 @@ class TMG:
                         # ">" ordering prevents re-discovering cycles from
                         # a later start node
                         stack.append((nxt, path + [place]))
+        self._cycles = cycles
         return cycles
 
     def strongly_connected(self) -> bool:
