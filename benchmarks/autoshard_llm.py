@@ -6,10 +6,23 @@ one the dry-run compiles (one XLA invocation instead of a ladder of
 them — the paper's invocation-frugality argument on the XLA oracle).
 Accuracy of the priced model vs compiled memory_analysis() is reported
 in EXPERIMENTS.md §Perf.
+
+The second pseudo-cell (``service/soak``) is the multi-tenant DSE
+service soak: N tenants over >= 2 apps x 2 backends driven concurrently
+through :class:`repro.serve.DSEService` with ``workers > 1`` at both
+the service and session level, gated on byte-equality of every
+tenant's front against its isolated sequential run AND on the shared
+ledger pricing strictly fewer real invocations than the tenants' sum.
+It writes ``artifacts/bench/BENCH_serve.json`` — the repo's perf
+trajectory file (queries/sec, coalescing hit rate, invocation counts
+per PR).  ``DSE_SOAK_TENANTS=2`` shrinks it to the cheap two-tenant
+load CI runs on every push (docs/service.md).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 from repro.configs import SHAPES, get_config, list_archs
@@ -18,12 +31,126 @@ from repro.core.autotune import (HBM_BYTES_PER_CHIP, choose_train_knobs,
 
 MESH = {"data": 16, "model": 16}
 
-# a fixed pseudo-cell: the planner walks the LLM config zoo through the
-# analytical autotune pricing, not a registered App's TMG
-SCENARIOS = {"pairs": (("zoo", "analytical"),)}
+# fixed pseudo-cells: the zoo planner walks the LLM config zoo through
+# the analytical autotune pricing (no registered App's TMG), and the
+# service soak drives registered apps through the DSE service
+SCENARIOS = {"pairs": (("zoo", "analytical"), ("service", "soak"))}
+
+
+def _soak_queries(tenants):
+    """The soak tenant mix, overlap-first: the first two tenants share
+    one oracle pool (characterization is delta-independent, so the
+    two-tenant CI soak already exercises coalescing + the shared
+    cache); four tenants cover 2 apps x 2 backends (the ISSUE
+    acceptance shape)."""
+    from repro.core import DSEQuery
+    from repro.core.registry import get_app, get_backend
+    base = [
+        DSEQuery(app="wami", backend="analytical", workers=2, tenant="t0"),
+        DSEQuery(app="wami", backend="analytical", delta=0.5, tenant="t1"),
+        DSEQuery(app="wami", backend="pallas", share_plm=True,
+                 workers=2, tenant="t2"),
+        DSEQuery(app="fleet", backend="analytical", tenant="t3"),
+    ]
+    picked, dropped = [], []
+    for q in base[:max(2, tenants)]:
+        reason = get_backend(q.backend).skip_reason(get_app(q.app))
+        (dropped if reason else picked).append((q, reason))
+    return [q for q, _ in picked], [(q, r) for q, r in dropped]
+
+
+def _run_soak(report, cell) -> None:
+    from repro.core.registry import build_query_session
+    from repro.serve import DSEService
+
+    tenants = int(os.environ.get("DSE_SOAK_TENANTS", "4"))
+    queries, dropped = _soak_queries(tenants)
+
+    # isolated sequential references: per-tenant front + attribution
+    iso = {}
+    for q in queries:
+        s = build_query_session(q)
+        iso[q.tenant] = (s.run(), dict(s.ledger.invocations))
+
+    t0 = time.time()
+    with DSEService(max_pending=len(queries), workers=3) as svc:
+        handles = svc.submit_all(queries)
+        results = {h.query.tenant: h.result(timeout=600) for h in handles}
+        stats = svc.stats()
+    wall_s = time.time() - t0
+
+    lines = [f"# DSE-service soak: {len(queries)} concurrent tenants "
+             f"vs isolated sequential runs",
+             "tenant,app,backend,share_plm,delta,invocations,"
+             "front_identical,attribution_identical"]
+    for h in handles:
+        q = h.query
+        ref, ref_inv = iso[q.tenant]
+        res = results[q.tenant]
+        front_ok = (repr(res.planned) == repr(ref.planned)
+                    and repr(res.mapped) == repr(ref.mapped))
+        inv_ok = h.invocations() == ref_inv
+        lines.append(f"{q.tenant},{q.app},{q.backend},{q.share_plm},"
+                     f"{q.delta},{sum(ref_inv.values())},"
+                     f"{'Y' if front_ok else 'N'},"
+                     f"{'Y' if inv_ok else 'N'}")
+        # the gates: concurrency must be invisible per tenant
+        assert front_ok, (f"tenant {q.tenant} ({q.app}/{q.backend}): "
+                          f"concurrent front differs from isolated run")
+        assert inv_ok, (f"tenant {q.tenant}: ledger attribution differs "
+                        f"from isolated run")
+    for q, reason in dropped:
+        lines.append(f"# dropped {q.tenant} ({q.app}/{q.backend}): {reason}")
+
+    tenant_sum = sum(sum(inv.values()) for _, inv in iso.values())
+    shared = stats["shared_invocations"]
+    # ...while the shared ledger prices strictly fewer real calls
+    assert shared < tenant_sum, (
+        f"no cross-tenant dedup: shared ledger {shared} >= "
+        f"tenant sum {tenant_sum}")
+    hits = sum(p["hits"] for p in stats["pools"].values())
+    joins = sum(p["joins"] for p in stats["pools"].values())
+    hit_rate = (hits + joins) / tenant_sum if tenant_sum else 0.0
+    lines.append(f"# shared ledger: {shared} real invocations for "
+                 f"{tenant_sum} attributed ({tenant_sum - shared} saved; "
+                 f"{hits} cache hits + {joins} in-flight joins)")
+    report.write("dse_service_soak", lines)
+    report.csv("dse_service_soak", wall_s * 1e6,
+               f"tenants={len(queries)}_saved="
+               f"{tenant_sum - shared}of{tenant_sum}")
+
+    # the perf trajectory file (ROADMAP: track across PRs)
+    path = os.path.join(report.out_dir, "BENCH_serve.json")
+    doc = {"version": 1, "bench": "dse-service soak",
+           "generated_by": "python -m benchmarks.run --cell "
+                           "autoshard/service-soak",
+           "tenants": len(queries),
+           "queries_per_sec": round(len(queries) / wall_s, 3),
+           "wall_s": round(wall_s, 3),
+           "coalescing_hit_rate": round(hit_rate, 4),
+           "cache_hits": hits,
+           "inflight_joins": joins,
+           "tenant_invocations": tenant_sum,
+           "shared_invocations": shared,
+           "saved_invocations": tenant_sum - shared,
+           "pools": {slug: {"invocations": p["invocations"],
+                            "hits": p["hits"], "joins": p["joins"],
+                            "batches": p["batches"],
+                            "tenants": p["tenants"]}
+                     for slug, p in sorted(stats["pools"].items())}}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
 
 
 def run(report, cell) -> None:
+    if cell.app == "service":
+        _run_soak(report, cell)
+        return
+    _run_zoo(report, cell)
+
+
+def _run_zoo(report, cell) -> None:
     t0 = time.time()
     shape = SHAPES[0]           # train_4k
     lines = ["# COSMOS-TPU planner: train_4k knob choice per arch "

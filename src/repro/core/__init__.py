@@ -43,7 +43,7 @@ from .mapping import MapOutcome, map_target, phi
 from .memgen import MemGen, PLM, PLMSpec
 from .oracle import (CountingTool, InvocationRecord, InvocationRequest,
                      Oracle, OracleBatchMixin, OracleLedger,
-                     PersistentOracleCache)
+                     PersistentOracleCache, SharedOracle)
 from .calibrate import (CalibratedTool, CalibrationFit, calibrate_to_records,
                         fit_area_scale, fit_latency_scales)
 from .plm import (MemoryCompatGraph, MemoryGroup, MemoryPlan, PLMPlanner,
@@ -52,16 +52,16 @@ from .plm import (MemoryCompatGraph, MemoryGroup, MemoryPlan, PLMPlanner,
 from .pallas_oracle import (MeasurementSet, MeasurementStore,
                             MissingMeasurementError, PallasKernelSpec,
                             PallasOracle)
-from .registry import (App, Backend, build_session, build_tool, get_app,
-                       get_backend, list_apps, list_backends, register_app,
-                       register_backend)
+from .registry import (App, Backend, build_query_session, build_session,
+                       build_tool, get_app, get_backend, list_apps,
+                       list_backends, register_app, register_backend)
 from .pareto import (DesignPoint, check_delta_curve, dominates_max_min,
                      dominates_min_min, pareto_front_max_min,
                      pareto_front_min_min, span)
 from .planning import (ComponentModel, PiecewiseLinearCost, PlanPoint,
                        Schedule, plan, sweep, theta_bounds)
 from .plm.compat import CompatSource
-from .session import ExplorationSession, ProgressEvent
+from .session import DSEQuery, ExplorationSession, ProgressEvent
 from .tmg import TMG, Place, Transition, feedback_pipeline_tmg, pipeline_tmg
 
 __all__ = [
@@ -72,16 +72,17 @@ __all__ = [
     "powers_of_two",
     "Oracle", "OracleBatchMixin", "OracleLedger", "CountingTool",
     "InvocationRequest", "InvocationRecord", "PersistentOracleCache",
+    "SharedOracle",
     "PallasOracle", "PallasKernelSpec", "MeasurementStore",
     "MeasurementSet", "MissingMeasurementError",
     "App", "Backend", "register_app", "register_backend", "get_app",
     "get_backend", "list_apps", "list_backends", "build_tool",
-    "build_session",
+    "build_session", "build_query_session",
     "CalibratedTool", "CalibrationFit", "fit_latency_scales",
     "fit_area_scale", "calibrate_to_records",
     "PLMRequirement", "MemoryGroup", "MemoryPlan", "MemoryCompatGraph",
     "exclusive_pairs", "PLMPlanner", "UnitSystem", "fit_unit_system",
-    "ExplorationSession", "ProgressEvent",
+    "ExplorationSession", "ProgressEvent", "DSEQuery",
     "ComponentSpec", "LoopNest", "HLSTool", "MemGen", "PLM", "PLMSpec",
     "CharacterizationResult", "characterize_component", "spans",
     "ComponentModel", "PiecewiseLinearCost", "PlanPoint", "Schedule",

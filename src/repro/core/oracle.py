@@ -45,6 +45,7 @@ __all__ = [
     "OracleCache",
     "PersistentOracleCache",
     "OracleLedger",
+    "SharedOracle",
     "CountingTool",
     "call_synthesize",
 ]
@@ -197,16 +198,37 @@ class PersistentOracleCache:
     last ``flush_every - 1`` points — they are simply re-invoked on
     resume — and the ledger flushes the remainder when a session
     completes.  Set ``flush_every=1`` for per-invocation durability.
+
+    ``root=None`` keeps the cache purely in memory (no store behind it)
+    — what a :class:`SharedOracle` pool uses when the service has no
+    durable cache directory configured.
+
+    ``max_entries`` bounds the cache with LRU eviction: :meth:`get` and
+    :meth:`put` move the key to most-recently-used, and a put beyond
+    the bound drops the least-recently-used entry entirely — from
+    memory *and* from the next flush, so an evicted point is re-invoked
+    (exactly once) if it is ever needed again.  ``hits`` / ``misses`` /
+    ``evictions`` count :meth:`get`/:meth:`put` traffic for the service
+    soak bench; the bulk :meth:`entries` pre-seed path counts nothing
+    and does not touch recency.
     """
 
-    def __init__(self, root: str, *, flush_every: int = 16, keep: int = 2):
+    def __init__(self, root: Optional[str] = None, *, flush_every: int = 16,
+                 keep: int = 2, max_entries: Optional[int] = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self.root = root
         self.flush_every = max(1, flush_every)
         self.keep = max(1, keep)
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
         self._entries: Dict[Key, Synthesis] = {}
         self._dirty = 0
         self._lock = threading.Lock()
-        self._load()
+        if root is not None:
+            self._load()
 
     # -- store glue ----------------------------------------------------
     @staticmethod
@@ -230,13 +252,18 @@ class PersistentOracleCache:
             key = (comp, int(unrolls), int(ports),
                    None if max_states is None else int(max_states), tile)
             self._entries[key] = _synth_from_json(rec["synth"])
+        if self.max_entries is not None:
+            # a persisted cache larger than the bound trims oldest-first
+            # (flush order is insertion order) — not counted as traffic
+            while len(self._entries) > self.max_entries:
+                self._entries.pop(next(iter(self._entries)))
 
     def flush(self) -> None:
         with self._lock:
             self._flush_locked()
 
     def _flush_locked(self) -> None:
-        if self._dirty == 0:
+        if self._dirty == 0 or self.root is None:
             return
         import numpy as np
         store = self._store()
@@ -256,15 +283,269 @@ class PersistentOracleCache:
         with self._lock:
             return dict(self._entries)
 
+    def get(self, key: Key) -> Optional[Synthesis]:
+        """LRU-aware lookup: a hit refreshes the key's recency."""
+        with self._lock:
+            hit = self._entries.pop(key, None)
+            if hit is None:
+                self.misses += 1
+                return None
+            self._entries[key] = hit          # re-insert: most recent
+            self.hits += 1
+            return hit
+
     def put(self, key: Key, synth: Synthesis) -> None:
         with self._lock:
+            self._entries.pop(key, None)      # refresh recency on rewrite
             self._entries[key] = synth
+            if self.max_entries is not None:
+                while len(self._entries) > self.max_entries:
+                    self._entries.pop(next(iter(self._entries)))
+                    self.evictions += 1
             self._dirty += 1
             if self._dirty >= self.flush_every:
                 self._flush_locked()
 
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"entries": len(self._entries), "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions}
+
     def __len__(self) -> int:
         return len(self._entries)
+
+
+# ----------------------------------------------------------------------
+# Cross-tenant coalescing (the DSE-service substrate)
+# ----------------------------------------------------------------------
+class _Flight:
+    """Rendezvous for one in-flight knob point: waiters hold a reference,
+    so the result survives even if the shared cache evicts it before
+    every joiner has read it."""
+
+    __slots__ = ("event", "result", "error")
+
+    def __init__(self) -> None:
+        self.event = threading.Event()
+        self.result: Optional[Synthesis] = None
+        self.error: Optional[BaseException] = None
+
+
+class SharedOracle:
+    """One base tool multiplexed across many concurrent submitters.
+
+    The multi-tenant seam of the DSE service
+    (:mod:`repro.serve.dse_service`): every tenant wraps this in its own
+    :class:`OracleLedger` (per-tenant Fig. 11 attribution, identical to
+    an isolated run), while the SharedOracle dedups the *real* tool
+    traffic across all of them:
+
+      * a shared :class:`PersistentOracleCache` (optionally LRU-bounded)
+        answers repeats from any tenant without a tool call;
+      * identical points submitted concurrently join one in-flight call
+        (``joins`` counts the coalesced waiters);
+      * distinct points pending at the same moment are drained by a
+        single dispatcher thread into ONE ``evaluate_batch`` call on the
+        base tool — natural batching: while a batch is in flight, new
+        arrivals accumulate for the next drain, so no timing window is
+        needed and results stay deterministic per key.
+
+    Errors are per-key and never cached: a batch that raises is re-priced
+    point-by-point so the exception reaches exactly the tenants that
+    asked for the failing key (``batch_retries`` counts these passes —
+    the re-invocations they cost are the price of attribution, paid only
+    on the failure path), and a later retry of that key dispatches (and
+    counts) again, exactly like :class:`OracleLedger`'s retry rule.
+
+    ``invocations``/``failed``/``total()`` mirror the ledger's counting
+    surface — this IS the "shared ledger" the service reports: with any
+    cross-tenant overlap its total is strictly below the sum of the
+    per-tenant ledgers'.
+    """
+
+    def __init__(self, tool, *, cache: Optional[PersistentOracleCache] = None,
+                 name: str = ""):
+        self.tool = tool
+        self.cache = cache
+        self.name = name
+        self.invocations: Dict[str, int] = {}
+        self.failed: Dict[str, int] = {}
+        self.hits = 0               # answered from the shared cache
+        self.joins = 0              # coalesced onto an in-flight call
+        self.batches = 0            # dispatcher drains (evaluate_batch calls)
+        self.batch_retries = 0      # failed batches re-priced per point
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._inflight: Dict[Key, _Flight] = {}
+        self._pending: List[Tuple[InvocationRequest, _Flight]] = []
+        self._dispatcher: Optional[threading.Thread] = None
+        self._closed = False
+
+    # -- submitter side ------------------------------------------------
+    def evaluate(self, request: InvocationRequest) -> Synthesis:
+        key = request.key
+        with self._cv:
+            if self._closed:
+                raise RuntimeError(f"SharedOracle {self.name!r} is closed")
+            if self.cache is not None:
+                hit = self.cache.get(key)
+                if hit is not None:
+                    self.hits += 1
+                    return hit
+            fl = self._inflight.get(key)
+            if fl is not None:
+                self.joins += 1
+            else:
+                fl = _Flight()
+                self._inflight[key] = fl
+                self._pending.append((request, fl))
+                # counted at dispatch admission, like the ledger's
+                # count-up-front rule (exceptions still count)
+                comp = request.component
+                self.invocations[comp] = self.invocations.get(comp, 0) + 1
+                if self._dispatcher is None:
+                    try:
+                        self._dispatcher = threading.Thread(
+                            target=self._dispatch_loop,
+                            name=("shared-oracle-"
+                                  f"{self.name or f'{id(self):x}'}"),
+                            daemon=True)
+                        self._dispatcher.start()
+                    except BaseException:
+                        # never strand a flight others could join: a
+                        # dispatcher that failed to start completes
+                        # nothing, so unregister before re-raising
+                        self._dispatcher = None
+                        self._inflight.pop(key, None)
+                        self._pending.remove((request, fl))
+                        raise
+                self._cv.notify_all()
+        fl.event.wait()
+        if fl.error is not None:
+            raise RuntimeError(f"shared oracle invocation failed for "
+                               f"{key}: {fl.error}") from fl.error
+        assert fl.result is not None
+        return fl.result
+
+    def evaluate_batch(self, requests: Sequence[InvocationRequest],
+                       *, workers: Optional[int] = None) -> List[Synthesis]:
+        reqs = list(requests)
+        if len(reqs) <= 1:
+            return [self.evaluate(r) for r in reqs]
+        with ThreadPoolExecutor(max_workers=min(workers or 8,
+                                                len(reqs))) as pool:
+            return list(pool.map(self.evaluate, reqs))
+
+    # -- dispatcher side -----------------------------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if not self._pending and self._closed:
+                    return
+                batch = self._pending
+                self._pending = []
+            self._run_batch(batch)
+
+    def _call_one(self, req: InvocationRequest) -> Synthesis:
+        tool = self.tool
+        if hasattr(tool, "synthesize"):
+            return call_synthesize(tool, req.component,
+                                   unrolls=req.unrolls, ports=req.ports,
+                                   max_states=req.max_states, tile=req.tile)
+        return tool.evaluate(req)
+
+    def _run_batch(self, batch: List[Tuple[InvocationRequest, _Flight]]
+                   ) -> None:
+        reqs = [r for r, _ in batch]
+        self.batches += 1
+        outs: List[Optional[Synthesis]]
+        errs: List[Optional[BaseException]]
+        try:
+            if len(reqs) > 1 and hasattr(self.tool, "evaluate_batch"):
+                outs = list(self.tool.evaluate_batch(reqs))
+            else:
+                outs = [self._call_one(r) for r in reqs]
+            errs = [None] * len(reqs)
+        except BaseException as batch_exc:  # noqa: BLE001
+            if len(reqs) == 1:
+                # already attributable — re-pricing would double-invoke
+                # the tool and mask the error on the retry
+                outs, errs = [None], [batch_exc]
+            else:
+                # one failing point must not take the whole drain down:
+                # re-price per point so the error lands on the right key(s)
+                self.batch_retries += 1
+                outs, errs = [], []
+                for r in reqs:
+                    try:
+                        outs.append(self._call_one(r))
+                        errs.append(None)
+                    except BaseException as exc:  # noqa: BLE001
+                        outs.append(None)
+                        errs.append(exc)
+        for (req, fl), out, err in zip(batch, outs, errs):
+            with self._cv:
+                if err is None:
+                    assert out is not None
+                    if not out.feasible:
+                        comp = req.component
+                        self.failed[comp] = self.failed.get(comp, 0) + 1
+                    if self.cache is not None:
+                        self.cache.put(req.key, out)
+                    fl.result = out
+                else:
+                    fl.error = err          # transient: never cached
+                self._inflight.pop(req.key, None)
+            fl.event.set()
+
+    # -- tool delegation (tenant ledgers call these through us) --------
+    def synthesize(self, component: str, *, unrolls: int, ports: int,
+                   max_states: Optional[int] = None,
+                   tile: int = 0) -> Synthesis:
+        return self.evaluate(InvocationRequest(
+            component=component, unrolls=unrolls, ports=ports,
+            max_states=max_states, tile=tile))
+
+    def cdfg_facts(self, component: str, synth: Synthesis) -> CDFGFacts:
+        return self.tool.cdfg_facts(component, synth)
+
+    def plm_requirement(self, component: str, synth: Synthesis):
+        fn = getattr(self.tool, "plm_requirement", None)
+        return None if fn is None else fn(component, synth)
+
+    # -- accounting ----------------------------------------------------
+    def total(self, component: Optional[str] = None) -> int:
+        with self._lock:
+            if component is not None:
+                return self.invocations.get(component, 0)
+            return sum(self.invocations.values())
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            out: Dict[str, Any] = {
+                "invocations": sum(self.invocations.values()),
+                "failed": sum(self.failed.values()),
+                "hits": self.hits, "joins": self.joins,
+                "batches": self.batches,
+                "batch_retries": self.batch_retries,
+            }
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        return out
+
+    def close(self) -> None:
+        """Stop the dispatcher (pending work drains first) and flush the
+        shared cache.  Idempotent."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+            dispatcher = self._dispatcher
+        if dispatcher is not None:
+            dispatcher.join()
+        if self.cache is not None:
+            self.cache.flush()
 
 
 # ----------------------------------------------------------------------

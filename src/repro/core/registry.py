@@ -39,7 +39,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 from .knobs import KnobSpace
 from .pallas_oracle import MeasurementSet, PallasKernelSpec, PallasOracle
-from .session import ExplorationSession
+from .session import DSEQuery, ExplorationSession
 from .tmg import TMG
 
 __all__ = [
@@ -53,6 +53,7 @@ __all__ = [
     "list_backends",
     "build_tool",
     "build_session",
+    "build_query_session",
 ]
 
 
@@ -406,7 +407,9 @@ def build_session(app: App | str, backend: Backend | str = "analytical",
     """
     app = get_app(app) if isinstance(app, str) else app
     backend = get_backend(backend) if isinstance(backend, str) else backend
-    if tool is None:
+    if tool is None and kwargs.get("ledger") is None:
+        # a pre-built ledger already wraps its own tool; building one
+        # here would be dead weight (and, for measured backends, I/O)
         tool = backend.make_tool(app, share_plm=share_plm, tiles=tiles)
     if share_plm:
         if app.plm_planner is not None:
@@ -421,3 +424,21 @@ def build_session(app: App | str, backend: Backend | str = "analytical",
                               fixed=dict(app.fixed), workers=workers,
                               verify_plans=verify_plans,
                               **kwargs)
+
+
+def build_query_session(query: DSEQuery, *, workers: Optional[int] = None,
+                        **kwargs: Any) -> ExplorationSession:
+    """Resolve a :class:`~repro.core.session.DSEQuery` into a session —
+    the service's per-tenant resolution point.
+
+    Unknown app/backend names raise the registry's listing errors
+    *synchronously* (the service validates at submit time, before a
+    query ever occupies a queue slot).  ``workers`` overrides the
+    query's own fan-out; remaining keywords (``tool``, ``ledger``,
+    ``verify_plans``, ...) flow to :func:`build_session`.
+    """
+    return build_session(
+        query.app, query.backend, delta=query.delta,
+        workers=query.workers if workers is None else workers,
+        share_plm=query.share_plm, tile_sizes=query.tile_sizes,
+        tiles=query.tiles, **kwargs)

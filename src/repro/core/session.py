@@ -36,12 +36,13 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 from .characterize import CharacterizationResult, characterize_component
 from .knobs import CDFGFacts, KnobSpace, Region
 from .mapping import MapOutcome, map_target
-from .oracle import OracleCache, OracleLedger
+from .oracle import (OracleCache, OracleLedger, _synth_from_json,
+                     _synth_to_json)
 from .pareto import DesignPoint, pareto_front_max_min
 from .planning import ComponentModel, PlanPoint, Schedule, sweep, theta_bounds
 from .tmg import TMG
 
-__all__ = ["SystemPoint", "CosmosResult", "ProgressEvent",
+__all__ = ["SystemPoint", "CosmosResult", "ProgressEvent", "DSEQuery",
            "ExplorationSession"]
 
 
@@ -105,6 +106,45 @@ class ProgressEvent:
     label: str                   # component name / plan-point label
     done: int
     total: int
+
+
+@dataclass(frozen=True)
+class DSEQuery:
+    """One DSE request, as data: the session-as-query entry point.
+
+    Everything :func:`~repro.core.registry.build_session` resolves —
+    app, backend, budget (``delta``), PLM sharing, tile axes — plus the
+    ``tenant`` label the service uses for attribution.  Hashable, so a
+    query can key caches and coalescing pools.
+
+    ``pool_key`` names the oracle pool the query may share with other
+    tenants: everything that changes what the *tool* answers for a knob
+    key.  ``share_plm`` is part of it because the measured backends
+    price unrecorded points through a different (unit-calibrated)
+    fallback under ``share_plm``; ``delta``/``tile_sizes``/``workers``
+    are not, because they only change which points a session asks for,
+    never a point's price.
+    """
+
+    app: str
+    backend: str = "analytical"
+    delta: Optional[float] = None
+    share_plm: bool = False
+    tile_sizes: Optional[Tuple[int, ...]] = None
+    tiles: Optional[Tuple[int, ...]] = None
+    workers: int = 1
+    tenant: str = ""
+
+    def __post_init__(self):
+        # tolerate list inputs (queries arrive from JSON-ish callers)
+        for name in ("tile_sizes", "tiles"):
+            val = getattr(self, name)
+            if val is not None and not isinstance(val, tuple):
+                object.__setattr__(self, name, tuple(val))
+
+    @property
+    def pool_key(self) -> Tuple[str, str, bool, Tuple[int, ...]]:
+        return (self.app, self.backend, self.share_plm, self.tiles or ())
 
 
 # ----------------------------------------------------------------------
@@ -178,6 +218,59 @@ def _plan_from_json(d: Dict[str, Any]) -> PlanPoint:
         sched = Schedule.from_json(sched)
     return PlanPoint(theta=d["theta"], cost=d["cost"],
                      lam_targets=dict(d["lam_targets"]), schedule=sched)
+
+
+def _outcome_to_json(o: MapOutcome) -> Dict[str, Any]:
+    return {"component": o.component,
+            "synthesis": _synth_to_json(o.synthesis),
+            "region": None if o.region is None else _region_to_json(o.region),
+            "requested_lam": o.requested_lam, "fallback": o.fallback}
+
+
+def _outcome_from_json(d: Dict[str, Any]) -> MapOutcome:
+    region = d["region"]
+    return MapOutcome(component=d["component"],
+                      synthesis=_synth_from_json(d["synthesis"]),
+                      region=None if region is None
+                      else _region_from_json(region),
+                      requested_lam=d["requested_lam"],
+                      fallback=d["fallback"])
+
+
+def _system_to_json(m: SystemPoint) -> Dict[str, Any]:
+    """Serialize one mapped point — including the PR-6 fields
+    (``schedule`` and the memory plan's ``compat_tag``), which must
+    survive a save/restore cycle byte-identically."""
+    out: Dict[str, Any] = {
+        "theta_planned": m.theta_planned, "cost_planned": m.cost_planned,
+        "theta_actual": m.theta_actual, "cost_actual": m.cost_actual,
+        "outcomes": [_outcome_to_json(o) for o in m.outcomes],
+        "cost_unshared": m.cost_unshared,
+        "plm_groups": [list(g) for g in m.plm_groups],
+    }
+    if m.memory_plan is not None:
+        from .plm.spec import memory_plan_to_json
+        out["memory_plan"] = memory_plan_to_json(m.memory_plan)
+    if m.schedule is not None:
+        out["schedule"] = m.schedule.to_json()
+    return out
+
+
+def _system_from_json(d: Dict[str, Any]) -> SystemPoint:
+    mem = d.get("memory_plan")
+    if mem is not None:
+        from .plm.spec import memory_plan_from_json
+        mem = memory_plan_from_json(mem)
+    sched = d.get("schedule")
+    if sched is not None:
+        sched = Schedule.from_json(sched)
+    return SystemPoint(
+        theta_planned=d["theta_planned"], cost_planned=d["cost_planned"],
+        theta_actual=d["theta_actual"], cost_actual=d["cost_actual"],
+        outcomes=tuple(_outcome_from_json(o) for o in d["outcomes"]),
+        cost_unshared=d["cost_unshared"],
+        plm_groups=tuple(tuple(g) for g in d["plm_groups"]),
+        memory_plan=mem, schedule=sched)
 
 
 # ----------------------------------------------------------------------
@@ -410,11 +503,16 @@ class ExplorationSession:
 
     # -- mid-run serialization -----------------------------------------
     def state(self) -> Dict[str, Any]:
-        """JSON-able snapshot of every completed phase (mapping results
-        are the terminal output and are not part of the resumable state —
-        resume re-maps from the cached invocations for free)."""
+        """JSON-able snapshot of every completed phase.
+
+        Version 2 also snapshots the mapped points (schedules, memory
+        plans with their ``compat_tag``, map outcomes): a session saved
+        after ``map()`` restores its full result without a single tool
+        invocation.  Version-1 snapshots (no ``mapped``) still load —
+        they re-map from the cached invocations as before.
+        """
         return {
-            "version": 1,
+            "version": 2,
             "delta": self.delta,
             "fixed": dict(self.fixed),
             "characterizations": (
@@ -424,10 +522,12 @@ class ExplorationSession:
             "theta": [self.theta_min, self.theta_max],
             "planned": (None if self.planned is None else
                         [_plan_to_json(p) for p in self.planned]),
+            "mapped": (None if self.mapped is None else
+                       [_system_to_json(m) for m in self.mapped]),
         }
 
     def load_state(self, state: Dict[str, Any]) -> None:
-        if state.get("version") != 1:
+        if state.get("version") not in (1, 2):
             raise ValueError(f"unknown session state version: "
                              f"{state.get('version')!r}")
         chars = state.get("characterizations")
@@ -439,6 +539,9 @@ class ExplorationSession:
         if planned is not None:
             self.planned = [_plan_from_json(p) for p in planned]
             self.theta_min, self.theta_max = state["theta"]
+        mapped = state.get("mapped")          # absent in version-1 snapshots
+        if mapped is not None:
+            self.mapped = [_system_from_json(m) for m in mapped]
 
     def save(self, root: str) -> None:
         """Checkpoint the completed phases atomically (store protocol)."""
@@ -464,3 +567,13 @@ class ExplorationSession:
                                      {"phases_done": np.asarray(0)})
             sess.load_state(extra["session"])
         return sess
+
+    # -- session-as-query ----------------------------------------------
+    @classmethod
+    def from_query(cls, query: DSEQuery, **kwargs) -> "ExplorationSession":
+        """Resolve a :class:`DSEQuery` through the App/Backend registry
+        — what the DSE service runs per tenant.  Keywords (``ledger``,
+        ``tool``, ``verify_plans``, ...) flow to
+        :func:`~repro.core.registry.build_query_session`."""
+        from .registry import build_query_session   # lazy: registry imports us
+        return build_query_session(query, **kwargs)

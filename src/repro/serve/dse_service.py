@@ -1,0 +1,362 @@
+"""DSE-as-a-service: many concurrent tenants, shared oracles.
+
+COSMOS's headline result is oracle frugality *within one run*; this
+module extends the discipline *across* runs.  A :class:`DSEService`
+accepts many concurrent :class:`~repro.core.session.DSEQuery`\\ s —
+different apps, budgets, tiles, backends, all resolved through
+:mod:`repro.core.registry` — and multiplexes them onto shared oracles,
+in the shape of CHARM's async task queues feeding duplicated
+accelerators:
+
+  * **submission queue with backpressure** — at most ``max_pending``
+    queries may sit queued; further submitters block (optionally with a
+    timeout) or get a :class:`Busy` result back, never an unbounded
+    queue;
+  * **request coalescing** — queries that resolve to the same oracle
+    pool (same ``(app, backend, share_plm, tiles)``) share one
+    :class:`~repro.core.oracle.SharedOracle`: identical ``(component,
+    knob, tile)`` points from different tenants join one in-flight tool
+    call, and distinct points pending together drain into single
+    ``evaluate_batch`` calls;
+  * **cross-tenant cache** — each pool carries a
+    :class:`~repro.core.oracle.PersistentOracleCache` (optionally
+    LRU-bounded via ``cache_entries``, optionally durable via
+    ``cache_root``) so a later tenant never re-pays a point an earlier
+    tenant already bought;
+  * **per-tenant ledger attribution** — every query runs under its own
+    :class:`~repro.core.oracle.OracleLedger`, so each tenant's
+    invocation counts (and therefore its front) are byte-identical to
+    an isolated run, while the pool's shared ledger records the real
+    (strictly smaller, under overlap) tool traffic;
+  * **async completion** — :meth:`DSEService.submit` returns a
+    :class:`QueryHandle` immediately; tenants ``poll()`` or block on
+    ``result()``/``wait()``.
+
+Failure isolation: a tenant whose oracle raises fails *its own*
+handle — the exception is re-raised from ``result()`` — and nothing
+poisons the shared state: errors are never cached, and every other
+tenant's front is unaffected (tests/test_dse_service.py seeds exactly
+this).  See docs/service.md for the query lifecycle.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Tuple, Union
+
+from ..core.oracle import OracleLedger, PersistentOracleCache, SharedOracle
+from ..core.registry import build_query_session, build_tool, get_app, get_backend
+from ..core.session import CosmosResult, DSEQuery
+
+__all__ = ["Busy", "QueryHandle", "DSEService"]
+
+
+@dataclass(frozen=True)
+class Busy:
+    """The backpressure answer: the queue was full (and stayed full for
+    the whole ``timeout``, if one was given).  Resubmit later — nothing
+    was enqueued."""
+
+    reason: str
+
+
+class QueryHandle:
+    """One submitted query's future: poll it or await it.
+
+    ``status`` moves ``queued -> running -> done | failed``.  After
+    completion, ``ledger`` carries the tenant's own
+    :class:`~repro.core.oracle.OracleLedger` — the per-tenant Fig. 11
+    attribution (identical to an isolated run of the same query).
+    """
+
+    def __init__(self, qid: int, query: DSEQuery):
+        self.qid = qid
+        self.query = query
+        self.status = "queued"
+        self.ledger: Optional[OracleLedger] = None
+        self.wall_s: float = 0.0
+        self._result: Optional[CosmosResult] = None
+        self._error: Optional[BaseException] = None
+        self._event = threading.Event()
+
+    # -- poll ----------------------------------------------------------
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def poll(self) -> str:
+        return self.status
+
+    # -- await ---------------------------------------------------------
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> CosmosResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"query {self.qid} ({self.query.app}/"
+                               f"{self.query.backend}) still "
+                               f"{self.status} after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[BaseException]:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"query {self.qid} still {self.status}")
+        return self._error
+
+    def invocations(self) -> Dict[str, int]:
+        """The tenant's attributed per-component invocation counts."""
+        return dict(self.ledger.invocations) if self.ledger else {}
+
+    # -- service side --------------------------------------------------
+    def _finish(self, result: Optional[CosmosResult],
+                error: Optional[BaseException]) -> None:
+        self._result = result
+        self._error = error
+        self.status = "done" if error is None else "failed"
+        self._event.set()
+
+
+def _pool_slug(key: Tuple[str, str, bool, Tuple[int, ...]]) -> str:
+    app, backend, share_plm, tiles = key
+    slug = f"{app}-{backend}"
+    if share_plm:
+        slug += "-share_plm"
+    if tiles:
+        slug += "-tiles" + "_".join(str(t) for t in tiles)
+    return slug
+
+
+@dataclass
+class _Pool:
+    """One shared oracle + its cache, keyed by ``DSEQuery.pool_key``."""
+
+    slug: str
+    oracle: SharedOracle
+    cache: PersistentOracleCache
+    tenants: int = 0            # queries that ran through this pool
+
+
+class DSEService:
+    """The concurrent multi-tenant DSE frontend.
+
+    ``workers`` service threads drain the bounded submission queue and
+    run one :class:`~repro.core.session.ExplorationSession` per query;
+    sessions whose queries resolve to the same oracle pool share a
+    :class:`~repro.core.oracle.SharedOracle` (coalescing + cross-tenant
+    cache).  ``cache_entries`` LRU-bounds each pool's cache;
+    ``cache_root`` makes the caches durable (one subdirectory per
+    pool); ``verify_plans`` turns on the strict plan post-pass for
+    every tenant session.
+
+    Use as a context manager, or call :meth:`close` — queued and
+    running queries complete first (``close(drain=False)`` abandons the
+    queue: still-queued handles fail with :class:`ServiceClosed`).
+    """
+
+    def __init__(self, *, max_pending: int = 8, workers: int = 2,
+                 cache_entries: Optional[int] = None,
+                 cache_root: Optional[str] = None,
+                 flush_every: int = 16,
+                 verify_plans: bool = False):
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.max_pending = max_pending
+        self.cache_entries = cache_entries
+        self.cache_root = cache_root
+        self.flush_every = flush_every
+        self.verify_plans = verify_plans
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._queue: Deque[QueryHandle] = deque()
+        self._pools: Dict[Tuple[str, str, bool, Tuple[int, ...]], _Pool] = {}
+        self._closed = False
+        self._next_qid = 0
+        self._running = 0
+        self._submitted = 0
+        self._done = 0
+        self._failed = 0
+        self._rejected = 0
+        self._tenant_invocations = 0
+        self._workers = [threading.Thread(target=self._worker_loop,
+                                          name=f"dse-service-{i}",
+                                          daemon=True)
+                         for i in range(max(1, workers))]
+        for t in self._workers:
+            t.start()
+
+    # -- submission ----------------------------------------------------
+    def submit(self, query: DSEQuery, *, block: bool = True,
+               timeout: Optional[float] = None
+               ) -> Union[QueryHandle, Busy]:
+        """Enqueue one query; returns its :class:`QueryHandle`, or
+        :class:`Busy` under backpressure.
+
+        Unknown app/backend names raise the registry's listing errors
+        here, synchronously — a bad query never occupies a queue slot.
+        ``block=False`` returns :class:`Busy` immediately when the
+        queue is full; ``block=True`` waits (at most ``timeout``
+        seconds, forever when None) for a slot.
+        """
+        get_app(query.app)              # registry-style KeyError on typos
+        get_backend(query.backend)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("DSEService is closed")
+            while len(self._queue) >= self.max_pending:
+                reason = (f"queue full ({self.max_pending} pending); "
+                          f"resubmit later")
+                if not block:
+                    self._rejected += 1
+                    return Busy(reason)
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    self._rejected += 1
+                    return Busy(reason + f" (timed out after {timeout}s)")
+                if not self._cv.wait(remaining):
+                    self._rejected += 1
+                    return Busy(reason + f" (timed out after {timeout}s)")
+                if self._closed:
+                    raise RuntimeError("DSEService is closed")
+            handle = QueryHandle(self._next_qid, query)
+            self._next_qid += 1
+            self._submitted += 1
+            self._queue.append(handle)
+            self._cv.notify_all()
+        return handle
+
+    def submit_all(self, queries: List[DSEQuery],
+                   timeout: Optional[float] = None) -> List[QueryHandle]:
+        """Blocking convenience: submit every query (waiting out
+        backpressure) and return the handles in order."""
+        out = []
+        for q in queries:
+            h = self.submit(q, block=True, timeout=timeout)
+            if isinstance(h, Busy):
+                raise TimeoutError(f"submit_all stalled: {h.reason}")
+            out.append(h)
+        return out
+
+    # -- the oracle pools ----------------------------------------------
+    def _pool(self, query: DSEQuery) -> _Pool:
+        key = query.pool_key
+        with self._lock:
+            pool = self._pools.get(key)
+            if pool is None:
+                slug = _pool_slug(key)
+                root = (None if self.cache_root is None else
+                        f"{self.cache_root}/{slug}")
+                cache = PersistentOracleCache(
+                    root, flush_every=self.flush_every,
+                    max_entries=self.cache_entries)
+                tool = build_tool(query.app, query.backend,
+                                  share_plm=query.share_plm,
+                                  tiles=query.tiles)
+                pool = _Pool(slug=slug, cache=cache,
+                             oracle=SharedOracle(tool, cache=cache,
+                                                 name=slug))
+                self._pools[key] = pool
+            pool.tenants += 1
+            return pool
+
+    # -- workers -------------------------------------------------------
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if not self._queue:
+                    return                   # closed and drained
+                handle = self._queue.popleft()
+                self._running += 1
+                self._cv.notify_all()        # a queue slot freed up
+            try:
+                self._run(handle)
+            finally:
+                with self._cv:
+                    self._running -= 1
+                    self._cv.notify_all()
+
+    def _run(self, handle: QueryHandle) -> None:
+        handle.status = "running"
+        t0 = time.monotonic()
+        try:
+            pool = self._pool(handle.query)
+            ledger = OracleLedger(pool.oracle,
+                                  workers=handle.query.workers)
+            handle.ledger = ledger
+            session = build_query_session(handle.query, ledger=ledger,
+                                          verify_plans=self.verify_plans)
+            result = session.run()
+        except BaseException as exc:  # noqa: BLE001 — isolated per tenant
+            handle.wall_s = time.monotonic() - t0
+            with self._lock:
+                self._failed += 1
+            handle._finish(None, exc)
+            return
+        handle.wall_s = time.monotonic() - t0
+        with self._lock:
+            self._done += 1
+            self._tenant_invocations += ledger.total()
+        handle._finish(result, None)
+
+    # -- introspection -------------------------------------------------
+    def shared_invocations(self) -> int:
+        """Real tool calls across every pool — the service-wide shared
+        ledger total.  Under any cross-tenant overlap this is strictly
+        below the sum of the per-tenant attributions."""
+        with self._lock:
+            pools = list(self._pools.values())
+        return sum(p.oracle.total() for p in pools)
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            pools = dict(self._pools)
+            out: Dict[str, Any] = {
+                "queries": {"submitted": self._submitted,
+                            "done": self._done, "failed": self._failed,
+                            "rejected_busy": self._rejected,
+                            "queued": len(self._queue),
+                            "running": self._running},
+                "tenant_invocations": self._tenant_invocations,
+            }
+        out["pools"] = {p.slug: dict(p.oracle.stats(), tenants=p.tenants)
+                        for p in pools.values()}
+        out["shared_invocations"] = sum(
+            p.oracle.total() for p in pools.values())
+        return out
+
+    # -- lifecycle -----------------------------------------------------
+    def close(self, *, drain: bool = True) -> None:
+        """Stop the service.  ``drain=True`` (default) lets queued and
+        running queries finish; ``drain=False`` fails still-queued
+        handles immediately (running ones still finish)."""
+        with self._cv:
+            if self._closed:
+                return
+            abandoned: List[QueryHandle] = []
+            if not drain:
+                abandoned = list(self._queue)
+                self._queue.clear()
+            self._closed = True
+            self._cv.notify_all()
+        for h in abandoned:
+            h._finish(None, RuntimeError(
+                "DSEService closed before this query ran"))
+        for t in self._workers:
+            t.join()
+        for pool in self._pools.values():
+            pool.oracle.close()
+
+    def __enter__(self) -> "DSEService":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

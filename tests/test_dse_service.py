@@ -1,0 +1,431 @@
+"""Concurrency battery for the multi-tenant DSE service.
+
+The contract under test (docs/service.md): N tenants running
+concurrently through one :class:`~repro.serve.DSEService` get fronts
+byte-identical to N isolated sequential runs, with per-tenant ledger
+attribution identical to isolation — while the shared oracle underneath
+dedups the real tool traffic (cache hits, in-flight joins, batching)
+and one tenant's failure never leaks into another tenant's front or the
+shared cache.
+"""
+
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import DSEQuery, OracleLedger, SharedOracle
+from repro.core.hlsim import ComponentSpec, HLSTool, LoopNest
+from repro.core.knobs import KnobSpace
+from repro.core.oracle import InvocationRequest, PersistentOracleCache
+from repro.core.registry import (App, _APPS, build_query_session,
+                                 register_app)
+from repro.core.tmg import pipeline_tmg
+from repro.serve import Busy, DSEService
+
+
+# ----------------------------------------------------------------------
+# runnable toy apps (registered per-test, deregistered by fixture —
+# leaking them would change the scenario matrix other tests assert on)
+# ----------------------------------------------------------------------
+def _toy_specs(scale=1):
+    return {
+        "a": ComponentSpec("a", LoopNest(256 * scale, 2, 1, 8, 3, 6),
+                           1024, 1024),
+        "b": ComponentSpec("b", LoopNest(128 * scale, 1, 1, 4, 2, 4),
+                           512, 512),
+    }
+
+
+class _BrokenTool(HLSTool):
+    """Seeded failure: every price for component 'b' raises."""
+
+    def synthesize(self, component, **kw):
+        if component == "b":
+            raise RuntimeError("seeded oracle failure for 'b'")
+        return super().synthesize(component, **kw)
+
+
+class _GatedTool(HLSTool):
+    """Every price blocks until the test opens the gate — lets a test
+    hold a worker busy deterministically (backpressure tests)."""
+
+    gate = threading.Event()
+
+    def synthesize(self, component, **kw):
+        if not _GatedTool.gate.wait(timeout=30):
+            raise TimeoutError("test gate never opened")
+        return super().synthesize(component, **kw)
+
+
+def _toy_app(name, tool_factory=None, scale=1):
+    return App(
+        name=name,
+        description="runnable toy for the DSE-service battery",
+        tmg=lambda: pipeline_tmg(["a", "b"], buffers=2),
+        knob_spaces=lambda **_: {n: KnobSpace(clock_ns=1.0, max_ports=4,
+                                              max_unrolls=8)
+                                 for n in ("a", "b")},
+        analytical=tool_factory or (lambda: HLSTool(_toy_specs(scale))),
+    )
+
+
+TOYS = {
+    "svc-toy-a": _toy_app("svc-toy-a"),
+    "svc-toy-b": _toy_app("svc-toy-b", scale=2),
+    "svc-toy-broken": _toy_app("svc-toy-broken",
+                               lambda: _BrokenTool(_toy_specs())),
+    "svc-toy-gated": _toy_app("svc-toy-gated",
+                              lambda: _GatedTool(_toy_specs())),
+}
+
+
+@pytest.fixture(autouse=True)
+def _toy_registry():
+    for app in TOYS.values():
+        register_app(app)
+    _GatedTool.gate.clear()
+    try:
+        yield
+    finally:
+        _GatedTool.gate.set()        # never leave a worker blocked
+        for name in TOYS:
+            _APPS.pop(name, None)
+
+
+def _isolated(query):
+    """Reference run: the query alone, its own session + ledger."""
+    s = build_query_session(query)
+    return s.run(), dict(s.ledger.invocations)
+
+
+def _front(result):
+    """The byte-comparable surface of one tenant's answer."""
+    return repr(result.planned), repr(result.mapped)
+
+
+# ----------------------------------------------------------------------
+# (1) N concurrent tenants == N sequential isolated runs, byte-identical
+# ----------------------------------------------------------------------
+def test_concurrent_tenants_match_isolated_runs():
+    queries = [
+        DSEQuery(app="svc-toy-a", tenant="t0"),
+        DSEQuery(app="svc-toy-a", delta=0.5, tenant="t1"),
+        DSEQuery(app="svc-toy-b", tenant="t2"),
+        DSEQuery(app="svc-toy-b", delta=0.4, tenant="t3"),
+        DSEQuery(app="svc-toy-a", tenant="t4"),      # exact duplicate of t0
+    ]
+    iso = {q.tenant: _isolated(q) for q in queries}
+    with DSEService(max_pending=8, workers=4) as svc:
+        handles = svc.submit_all(queries)
+        results = {h.query.tenant: h.result(timeout=60) for h in handles}
+        stats = svc.stats()
+    for h in handles:
+        ref, ref_inv = iso[h.query.tenant]
+        assert _front(results[h.query.tenant]) == _front(ref), h.query
+        # per-tenant attribution identical to isolation (Fig. 11)
+        assert h.invocations() == ref_inv, h.query
+        assert h.status == "done" and h.done()
+    # the shared ledger saw strictly fewer real calls than the tenants
+    # paid in attribution: t0/t1/t4 overlap on svc-toy-a, t2/t3 on -b
+    tenant_sum = sum(sum(inv.values()) for _, inv in iso.values())
+    assert stats["shared_invocations"] < tenant_sum
+    assert stats["tenant_invocations"] == tenant_sum
+    # and the dedup surfaced as cache hits and/or in-flight joins
+    pool_a = stats["pools"]["svc-toy-a-analytical"]
+    assert pool_a["tenants"] == 3
+    assert pool_a["hits"] + pool_a["joins"] > 0
+
+
+# ----------------------------------------------------------------------
+# (2) randomized tenant mixes / interleavings (property test)
+# ----------------------------------------------------------------------
+_REF_CACHE = {}
+
+
+def _reference(query):
+    if query.pool_key + (query.delta,) not in _REF_CACHE:
+        _REF_CACHE[query.pool_key + (query.delta,)] = _isolated(query)
+    return _REF_CACHE[query.pool_key + (query.delta,)]
+
+
+@settings(max_examples=8, deadline=None)
+@given(mix=st.lists(
+    st.tuples(st.sampled_from(["svc-toy-a", "svc-toy-b"]),
+              st.sampled_from([None, 0.4, 0.5])),
+    min_size=1, max_size=6),
+    workers=st.integers(min_value=1, max_value=4))
+def test_randomized_tenant_mixes_stay_deterministic(mix, workers):
+    """Any tenant mix, any submission interleaving, any worker count:
+    every tenant's front equals its isolated reference."""
+    for app in TOYS.values():          # hypothesis reruns outlive fixtures
+        register_app(app)
+    queries = [DSEQuery(app=a, delta=d, tenant=f"t{i}")
+               for i, (a, d) in enumerate(mix)]
+    with DSEService(max_pending=len(queries), workers=workers) as svc:
+        handles = svc.submit_all(queries)
+        for h in handles:
+            ref, ref_inv = _reference(h.query)
+            assert _front(h.result(timeout=60)) == _front(ref)
+            assert h.invocations() == ref_inv
+
+
+# ----------------------------------------------------------------------
+# (3) seeded failure: surfaces to that tenant only
+# ----------------------------------------------------------------------
+def test_failure_is_isolated_to_its_tenant():
+    queries = [
+        DSEQuery(app="svc-toy-a", tenant="healthy-0"),
+        DSEQuery(app="svc-toy-broken", tenant="doomed"),
+        DSEQuery(app="svc-toy-b", tenant="healthy-1"),
+    ]
+    iso = {q.tenant: _isolated(q)
+           for q in queries if q.tenant != "doomed"}
+    with DSEService(max_pending=4, workers=3) as svc:
+        handles = svc.submit_all(queries)
+        doomed = next(h for h in handles if h.query.tenant == "doomed")
+        with pytest.raises(RuntimeError, match="seeded oracle failure"):
+            doomed.result(timeout=60)
+        assert doomed.status == "failed"
+        assert isinstance(doomed.exception(), RuntimeError)
+        for h in handles:
+            if h.query.tenant == "doomed":
+                continue
+            ref, ref_inv = iso[h.query.tenant]
+            assert _front(h.result(timeout=60)) == _front(ref)
+            assert h.invocations() == ref_inv
+        stats = svc.stats()
+    assert stats["queries"]["failed"] == 1
+    assert stats["queries"]["done"] == 2
+    # the error was never cached in the broken tenant's pool
+    broken = stats["pools"]["svc-toy-broken-analytical"]
+    assert broken["cache"]["entries"] <= broken["invocations"]
+
+
+def test_error_is_never_cached_and_retry_reinvokes():
+    """SharedOracle error semantics, same rule as OracleLedger: a raise
+    is never stored, and a retry of the key dispatches (and counts)
+    again."""
+    calls = []
+
+    class Flaky(HLSTool):
+        def synthesize(self, component, **kw):
+            calls.append(component)
+            if len(calls) == 1:
+                raise RuntimeError("transient")
+            return super().synthesize(component, **kw)
+
+    cache = PersistentOracleCache(max_entries=None)
+    shared = SharedOracle(Flaky(_toy_specs()), cache=cache, name="flaky")
+    req = InvocationRequest(component="a", unrolls=1, ports=1)
+    with pytest.raises(RuntimeError, match="shared oracle invocation"):
+        shared.evaluate(req)
+    assert cache.get(req.key) is None          # error not cached
+    out = shared.evaluate(req)                 # retry reaches the tool
+    assert out.feasible and len(calls) == 2
+    assert shared.total("a") == 2              # counted both times
+    assert cache.get(req.key) is not None      # success IS cached
+    shared.close()
+
+
+# ----------------------------------------------------------------------
+# (4) LRU eviction: evicted points re-invoke exactly once
+# ----------------------------------------------------------------------
+def test_lru_eviction_reinvokes_exactly_once():
+    calls = []
+
+    class Counting(HLSTool):
+        def synthesize(self, component, **kw):
+            calls.append((component, kw["unrolls"]))
+            return super().synthesize(component, **kw)
+
+    cache = PersistentOracleCache(max_entries=2)
+    shared = SharedOracle(Counting(_toy_specs()), cache=cache, name="lru")
+    reqs = [InvocationRequest(component="a", unrolls=u, ports=1)
+            for u in (1, 2, 4)]
+    for r in reqs:
+        shared.evaluate(r)
+    assert len(calls) == 3
+    assert cache.stats()["evictions"] == 1     # u=1 fell out (oldest)
+    # recent entries answer from cache: no new tool calls
+    shared.evaluate(reqs[1])
+    shared.evaluate(reqs[2])
+    assert len(calls) == 3 and shared.hits == 2
+    # the evicted key re-invokes the tool exactly once...
+    shared.evaluate(reqs[0])
+    assert len(calls) == 4
+    # ...and is cached again (now u=2 is the evictee)
+    shared.evaluate(reqs[0])
+    assert len(calls) == 4
+    stats = cache.stats()
+    assert stats["entries"] == 2 and stats["evictions"] == 2
+    assert stats["hits"] == 3 and stats["misses"] >= 4
+    shared.close()
+
+
+def test_lru_eviction_keeps_tenant_ledgers_consistent():
+    """Fig. 11 counting survives eviction: a tenant's ledger counts a
+    point once no matter how often the shared cache forgot it, because
+    the ledger's own (unbounded, per-run) cache answers repeats — only
+    a *different* tenant re-asking pays a real re-invocation."""
+    shared = SharedOracle(HLSTool(_toy_specs()),
+                          cache=PersistentOracleCache(max_entries=1),
+                          name="tiny")
+    t1, t2 = OracleLedger(shared), OracleLedger(shared)
+    r1 = InvocationRequest(component="a", unrolls=1, ports=1)
+    r2 = InvocationRequest(component="a", unrolls=2, ports=1)
+    t1.evaluate(r1)
+    t1.evaluate(r2)                  # evicts r1 from the shared cache
+    t1.evaluate(r1)                  # tenant repeat: own cache, no count
+    assert t1.total("a") == 2        # exactly the distinct points asked
+    assert shared.total("a") == 2    # no re-invocation for the repeat
+    t2.evaluate(r1)                  # new tenant, evicted key: re-pays
+    assert t2.total("a") == 1
+    assert shared.total("a") == 3    # exactly one re-invocation
+    shared.close()
+
+
+def test_persistent_lru_bound_survives_reload(tmp_path):
+    root = str(tmp_path / "cache")
+    cache = PersistentOracleCache(root, max_entries=2, flush_every=1)
+    shared = SharedOracle(HLSTool(_toy_specs()), cache=cache)
+    reqs = [InvocationRequest(component="a", unrolls=u, ports=1)
+            for u in (1, 2, 4)]
+    for r in reqs:
+        shared.evaluate(r)
+    shared.close()
+    fresh = PersistentOracleCache(root, max_entries=2)
+    stats = fresh.stats()
+    assert stats["entries"] == 2
+    # the survivors are the two most recent points
+    assert fresh.get(reqs[0].key) is None
+    assert fresh.get(reqs[1].key) is not None
+    assert fresh.get(reqs[2].key) is not None
+
+
+# ----------------------------------------------------------------------
+# (5) backpressure: bounded queue, callers block or get Busy
+# ----------------------------------------------------------------------
+def test_backpressure_busy_and_unblock():
+    svc = DSEService(max_pending=1, workers=1)
+    try:
+        running = svc.submit(DSEQuery(app="svc-toy-gated", tenant="slow"))
+        # wait until the worker picked it up (the queue slot frees)
+        deadline = time.monotonic() + 10
+        while running.poll() == "queued":
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        queued = svc.submit(DSEQuery(app="svc-toy-a", tenant="q"))
+        assert not isinstance(queued, Busy)
+        # the one queue slot is taken: non-blocking submit bounces...
+        busy = svc.submit(DSEQuery(app="svc-toy-a", tenant="rejected"),
+                          block=False)
+        assert isinstance(busy, Busy) and "queue full" in busy.reason
+        # ...and a blocking submit with a timeout bounces too
+        busy2 = svc.submit(DSEQuery(app="svc-toy-a", tenant="timed-out"),
+                           timeout=0.05)
+        assert isinstance(busy2, Busy) and "timed out" in busy2.reason
+        _GatedTool.gate.set()
+        assert running.result(timeout=60) is not None
+        assert queued.result(timeout=60) is not None
+        assert svc.stats()["queries"]["rejected_busy"] == 2
+    finally:
+        _GatedTool.gate.set()
+        svc.close()
+
+
+def test_blocking_submit_waits_out_the_backpressure():
+    svc = DSEService(max_pending=1, workers=1)
+    try:
+        running = svc.submit(DSEQuery(app="svc-toy-gated", tenant="slow"))
+        while running.poll() == "queued":
+            time.sleep(0.01)
+        queued = svc.submit(DSEQuery(app="svc-toy-a", tenant="q1"))
+        got = []
+
+        def blocked_submit():
+            got.append(svc.submit(DSEQuery(app="svc-toy-a", tenant="q2")))
+
+        t = threading.Thread(target=blocked_submit)
+        t.start()
+        t.join(timeout=0.2)
+        assert t.is_alive()          # genuinely blocked on the full queue
+        _GatedTool.gate.set()        # drain -> slot frees -> submit lands
+        t.join(timeout=60)
+        assert not t.is_alive()
+        handle = got[0]
+        assert not isinstance(handle, Busy)
+        assert handle.result(timeout=60) is not None
+        assert queued.result(timeout=60) is not None
+    finally:
+        _GatedTool.gate.set()
+        svc.close()
+
+
+# ----------------------------------------------------------------------
+# (6) submission-time validation + lifecycle
+# ----------------------------------------------------------------------
+def test_unknown_names_raise_at_submit_not_in_the_worker():
+    with DSEService(max_pending=2, workers=1) as svc:
+        with pytest.raises(KeyError, match="unknown app"):
+            svc.submit(DSEQuery(app="no-such-app"))
+        with pytest.raises(KeyError, match="unknown backend"):
+            svc.submit(DSEQuery(app="svc-toy-a", backend="verilog"))
+        assert svc.stats()["queries"]["submitted"] == 0
+
+
+def test_close_without_drain_fails_queued_handles():
+    svc = DSEService(max_pending=4, workers=1)
+    running = svc.submit(DSEQuery(app="svc-toy-gated", tenant="slow"))
+    while running.poll() == "queued":
+        time.sleep(0.01)
+    abandoned = svc.submit(DSEQuery(app="svc-toy-a", tenant="late"))
+    _GatedTool.gate.set()
+    svc.close(drain=False)
+    with pytest.raises(RuntimeError, match="closed before"):
+        abandoned.result(timeout=5)
+    assert abandoned.status == "failed"
+    assert running.result(timeout=5) is not None   # running ones finish
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(DSEQuery(app="svc-toy-a"))
+
+
+def test_result_timeout_raises_timeouterror():
+    svc = DSEService(max_pending=2, workers=1)
+    try:
+        h = svc.submit(DSEQuery(app="svc-toy-gated", tenant="slow"))
+        with pytest.raises(TimeoutError):
+            h.result(timeout=0.05)
+    finally:
+        _GatedTool.gate.set()
+        svc.close()
+
+
+# ----------------------------------------------------------------------
+# (7) the real thing: 4 tenants over 2 apps x 2 backends (acceptance)
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+def test_acceptance_four_tenants_two_apps_two_backends():
+    """The ISSUE acceptance run in test form (the soak bench repeats it
+    under load): fronts byte-identical to isolation, shared ledger
+    strictly below the per-tenant sum."""
+    queries = [
+        DSEQuery(app="wami", backend="analytical", tenant="t0"),
+        DSEQuery(app="wami", backend="analytical", delta=0.5, tenant="t1"),
+        DSEQuery(app="wami", backend="pallas", share_plm=True,
+                 tenant="t2"),
+        DSEQuery(app="fleet", backend="analytical", tenant="t3"),
+    ]
+    iso = {q.tenant: _isolated(q) for q in queries}
+    with DSEService(max_pending=8, workers=3) as svc:
+        handles = svc.submit_all(queries)
+        for h in handles:
+            ref, ref_inv = iso[h.query.tenant]
+            assert _front(h.result(timeout=300)) == _front(ref), h.query
+            assert h.invocations() == ref_inv
+        stats = svc.stats()
+    tenant_sum = sum(sum(inv.values()) for _, inv in iso.values())
+    assert stats["shared_invocations"] < tenant_sum
+    assert len(stats["pools"]) == 3     # t0/t1 coalesced onto one pool

@@ -111,6 +111,79 @@ def test_restore_with_persistent_cache_reinvokes_nothing(tmp_path):
     assert res.invocations == ref.invocations
 
 
+class _PoisonTool:
+    """A restore that needs ANY tool traffic is a serialization bug."""
+
+    def synthesize(self, *a, **k):
+        raise AssertionError("restore must not invoke the tool")
+
+    def cdfg_facts(self, *a, **k):
+        raise AssertionError("restore must not invoke the tool")
+
+
+def test_save_after_map_restores_without_any_tool(tmp_path):
+    """Regression: version-1 snapshots dropped the mapped points, so a
+    save-after-map restore silently re-ran the whole map phase (and
+    with it, tool invocations).  Version 2 restores the full result —
+    schedules included — without a single call."""
+    specs, tmg, spaces = _system()
+    root = os.path.join(tmp_path, "session")
+    s1 = ExplorationSession(tmg, HLSTool(dict(specs)), spaces, delta=0.3)
+    ref = s1.run()
+    s1.save(root)
+
+    s2 = ExplorationSession.restore(root, tmg, _PoisonTool(), spaces,
+                                    delta=0.3)
+    res = s2.run()                        # everything answered from state
+    assert repr(res.mapped) == repr(ref.mapped)
+    assert repr(res.planned) == repr(ref.planned)
+    # the LP schedule survived the round trip on both surfaces
+    assert all(p.schedule is not None for p in res.planned)
+    assert [m.schedule.tag() for m in res.mapped] == \
+        [m.schedule.tag() for m in ref.mapped]
+
+
+def test_state_round_trips_schedule_and_compat_tag():
+    """PR-6 fields through the JSON snapshot: ``SystemPoint.schedule``
+    and ``MemoryPlan.compat_tag`` must survive byte-identically (a
+    share-plm session carries both on every mapped point)."""
+    import json
+
+    from repro.core.registry import build_session
+
+    s1 = build_session("wami", "analytical", share_plm=True)
+    ref = s1.run()
+    state = json.loads(json.dumps(s1.state()))   # force a real JSON trip
+    assert state["version"] == 2
+
+    s2 = build_session("wami", "analytical", share_plm=True,
+                       tool=_PoisonTool())
+    s2.load_state(state)
+    res = s2.result()
+    assert repr(res.mapped) == repr(ref.mapped)
+    for got, want in zip(res.mapped, ref.mapped):
+        assert got.memory_plan is not None
+        assert got.memory_plan.compat_tag == want.memory_plan.compat_tag
+        assert got.schedule.tag() == want.schedule.tag()
+        assert got.memory_plan.compat_tag == got.schedule.tag()
+
+
+def test_version1_snapshot_still_loads():
+    """Old snapshots (no ``mapped`` key) keep loading: the session
+    re-maps from the restored characterizations as before."""
+    specs, tmg, spaces = _system()
+    s1 = ExplorationSession(tmg, HLSTool(dict(specs)), spaces, delta=0.3)
+    ref = s1.run()
+    state = s1.state()
+    v1 = {k: v for k, v in state.items() if k != "mapped"}
+    v1["version"] = 1
+    s2 = ExplorationSession(tmg, HLSTool(dict(specs)), spaces, delta=0.3)
+    s2.load_state(v1)
+    assert s2.mapped is None              # v1 cannot restore the map
+    res = s2.run()                        # ...but re-maps to the same front
+    assert repr(res.mapped) == repr(ref.mapped)
+
+
 # ----------------------------------------------------------------------
 # Acceptance: WAMI batched == sequential, through the session API
 # ----------------------------------------------------------------------
