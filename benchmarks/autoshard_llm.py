@@ -32,9 +32,11 @@ from repro.core.autotune import (HBM_BYTES_PER_CHIP, choose_train_knobs,
 MESH = {"data": 16, "model": 16}
 
 # fixed pseudo-cells: the zoo planner walks the LLM config zoo through
-# the analytical autotune pricing (no registered App's TMG), and the
-# service soak drives registered apps through the DSE service
-SCENARIOS = {"pairs": (("zoo", "analytical"), ("service", "soak"))}
+# the analytical autotune pricing (no registered App's TMG), the
+# service soak drives registered apps through the DSE service, and the
+# service trace commits the deterministic logical-clock trace artifact
+SCENARIOS = {"pairs": (("zoo", "analytical"), ("service", "soak"),
+                       ("service", "trace"))}
 
 
 def _soak_queries(tenants):
@@ -119,9 +121,12 @@ def _run_soak(report, cell) -> None:
                f"tenants={len(queries)}_saved="
                f"{tenant_sum - shared}of{tenant_sum}")
 
-    # the perf trajectory file (ROADMAP: track across PRs)
+    # the perf trajectory file (ROADMAP: track across PRs); version 2
+    # adds the per-pool outcome partition and the service-level
+    # queue-wait / latency histograms from the metrics registry
+    metrics = stats["metrics"]
     path = os.path.join(report.out_dir, "BENCH_serve.json")
-    doc = {"version": 1, "bench": "dse-service soak",
+    doc = {"version": 2, "bench": "dse-service soak",
            "generated_by": "python -m benchmarks.run --cell "
                            "autoshard/service-soak",
            "tenants": len(queries),
@@ -133,21 +138,148 @@ def _run_soak(report, cell) -> None:
            "tenant_invocations": tenant_sum,
            "shared_invocations": shared,
            "saved_invocations": tenant_sum - shared,
+           "queue_wait_s": metrics["service.queue_wait_s"],
+           "latency_s": metrics["service.latency_s"],
            "pools": {slug: {"invocations": p["invocations"],
                             "hits": p["hits"], "joins": p["joins"],
                             "batches": p["batches"],
-                            "tenants": p["tenants"]}
+                            "tenants": p["tenants"],
+                            "outcomes": p["outcomes"]}
                      for slug, p in sorted(stats["pools"].items())}}
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
 
 
+def _run_trace(report, cell) -> None:
+    """The committed observability artifact: a two-tenant service run
+    driven strictly sequentially under a :class:`LogicalClock`, so the
+    Chrome ``trace_event`` export is byte-identical across runs and
+    machines (the CI determinism gate ``cmp``s two fresh runs).
+
+    A second service instance reuses the first one's persistent cache
+    root so every outcome tag in the partition appears: ``fresh`` and
+    ``cache_hit`` in pass 1, ``replay`` in pass 2 (``inflight_join``
+    needs concurrent submitters and stays 0 here by construction —
+    determinism requires the sequential drive; the soak cell covers
+    joins).  Before exporting, the run re-proves the Fig. 11
+    reconciliation invariants from the ISSUE acceptance gate.
+    """
+    import shutil
+    import tempfile
+
+    from repro.core import DSEQuery
+    from repro.core.obs import (LogicalClock, MetricsRegistry, Tracer,
+                                validate_chrome)
+    from repro.serve import DSEService
+
+    queries = [
+        DSEQuery(app="wami", backend="analytical", tenant="alpha"),
+        DSEQuery(app="wami", backend="analytical", delta=0.5, tenant="beta"),
+    ]
+    tracer = Tracer(clock=LogicalClock())
+    cache_root = tempfile.mkdtemp(prefix="dse-trace-")
+    ledgers = {}
+    try:
+        # pass 1 (cold cache): fresh + cache_hit outcomes.  flush_every=1
+        # so pass 2 sees every entry on disk while svc stays open — its
+        # worker threads stay alive, which keeps thread idents (and so
+        # the tracer's tid assignment) from being reused by svc2.
+        with DSEService(max_pending=4, workers=1, cache_root=cache_root,
+                        flush_every=1, tracer=tracer,
+                        metrics=MetricsRegistry()) as svc:
+            for q in queries:
+                h = svc.submit(q)
+                h.result(timeout=600)       # sequential: determinism
+                ledgers[q.tenant] = h.outcome_counts()
+            stats1 = svc.stats()
+            # pass 2 (warm persistent cache, new instance): replay
+            with DSEService(max_pending=4, workers=1,
+                            cache_root=cache_root, tracer=tracer,
+                            metrics=MetricsRegistry()) as svc2:
+                h = svc2.submit(DSEQuery(app="wami", backend="analytical",
+                                         tenant="alpha2"))
+                h.result(timeout=600)
+                ledgers["alpha2"] = h.outcome_counts()
+                stats2 = svc2.stats()
+
+        # --- Fig. 11 reconciliation gates (ISSUE acceptance) ---------
+        # per-tenant: the four outcomes partition all evaluated points,
+        # and fresh+replay is exactly the ledger's real-invocation total
+        point_counts = tracer.outcome_counts("oracle.point")
+        tenant_total = {t: sum(c.values()) for t, c in ledgers.items()}
+        agg = {}
+        for counts in ledgers.values():
+            for o, n in counts.items():
+                agg[o] = agg.get(o, 0) + n
+        assert {o: n for o, n in agg.items() if n} == point_counts, (
+            f"ledger outcome counters {agg} != traced oracle.point "
+            f"outcomes {point_counts}")
+        assert agg.get("cache_hit", 0) > 0, "no cache_hit points"
+        assert agg.get("inflight_join", 0) == 0, (
+            "sequential drive cannot join flights")
+
+        # shared level: every tenant-fresh point reaches the shared
+        # oracle exactly once, and the shared fresh count is the real
+        # tool-invocation total
+        shared_counts = tracer.outcome_counts("shared.point")
+        pool_outcomes = {}
+        for stats in (stats1, stats2):
+            for p in stats["pools"].values():
+                for o, n in p["outcomes"].items():
+                    pool_outcomes[o] = pool_outcomes.get(o, 0) + n
+        pool_outcomes = {o: n for o, n in sorted(pool_outcomes.items()) if n}
+        assert pool_outcomes == shared_counts, (
+            f"pool outcome counters {pool_outcomes} != traced "
+            f"shared.point outcomes {shared_counts}")
+        # the tenant ledgers hold no persistent cache, so ``replay``
+        # appears exactly where the restored entries live: the shared
+        # pool cache that pass 2 rehydrated from disk
+        assert shared_counts.get("replay", 0) > 0, (
+            "pass 2 produced no replay points at the shared level")
+        assert sum(shared_counts.values()) == agg["fresh"], (
+            f"shared.point total {sum(shared_counts.values())} != "
+            f"tenant fresh sum {agg['fresh']}")
+        shared_real = (stats1["shared_invocations"]
+                       + stats2["shared_invocations"])
+        assert shared_counts.get("fresh", 0) == shared_real, (
+            f"shared fresh {shared_counts.get('fresh', 0)} != shared "
+            f"ledger total {shared_real}")
+
+        doc = tracer.export_chrome()
+        problems = validate_chrome(doc)
+        assert not problems, f"invalid trace_event export: {problems[:5]}"
+        report.write_json("service_trace", doc, kind="trace")
+
+        lines = [f"# deterministic service trace: {len(ledgers)} queries, "
+                 f"{len(doc['traceEvents'])} events (logical clock)",
+                 "tenant,fresh,cache_hit,inflight_join,replay,total"]
+        for tenant, counts in sorted(ledgers.items()):
+            lines.append(f"{tenant},{counts.get('fresh', 0)},"
+                         f"{counts.get('cache_hit', 0)},"
+                         f"{counts.get('inflight_join', 0)},"
+                         f"{counts.get('replay', 0)},{tenant_total[tenant]}")
+        lines.append(f"# shared pool outcomes: {pool_outcomes} "
+                     f"({shared_real} real tool invocations)")
+        report.write("service_trace", lines)
+        report.csv("service_trace", float(len(doc["traceEvents"])),
+                   f"events_outcomes=f{agg.get('fresh', 0)}"
+                   f"_c{agg.get('cache_hit', 0)}"
+                   f"_r{shared_counts.get('replay', 0)}")
+    finally:
+        shutil.rmtree(cache_root, ignore_errors=True)
+
+
 def run(report, cell) -> None:
     if cell.app == "service":
-        _run_soak(report, cell)
+        if cell.backend == "trace":
+            _run_trace(report, cell)
+        else:
+            _run_soak(report, cell)
         return
     _run_zoo(report, cell)
+
+
 
 
 def _run_zoo(report, cell) -> None:

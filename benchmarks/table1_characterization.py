@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import os
 import statistics
 import time
 
@@ -11,6 +13,46 @@ from repro.apps.wami.pipeline import wami_cosmos_no_memory
 # the COSMOS-vs-No-Memory span comparison is an analytical-model
 # experiment (the No-Memory ablation has no measured counterpart)
 SCENARIOS = {"apps": ("wami",), "backends": ("analytical",)}
+
+
+def _write_pricing(report) -> None:
+    """The points-priced-per-second trajectory file: a full wami
+    analytical DSE through a metrics-instrumented ledger, pricing
+    throughput from the ``oracle.invoke_wall_s`` histogram (real tool
+    invocations only — cache hits are free and excluded by
+    construction)."""
+    from repro.core import OracleLedger, build_session, build_tool
+    from repro.core.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    ledger = OracleLedger(build_tool("wami", "analytical"), metrics=reg)
+    sess = build_session("wami", "analytical", ledger=ledger)
+    t0 = time.time()
+    sess.run()
+    wall = time.time() - t0
+
+    hist = reg.snapshot()["oracle.invoke_wall_s"]
+    outcomes = ledger.outcome_counts()
+    points = ledger.total()
+    doc = {"version": 1, "bench": "points-priced-per-second",
+           "generated_by": "python -m benchmarks.run --cell "
+                           "table1/wami-analytical",
+           "app": "wami", "backend": "analytical",
+           "points": points,
+           "points_per_sec": round(points / hist["sum"], 1)
+                             if hist["sum"] else None,
+           "tool_wall_s": round(hist["sum"], 6),
+           "session_wall_s": round(wall, 3),
+           "outcomes": outcomes,
+           "invoke_wall_hist": hist["buckets"],
+           "per_component": dict(sorted(ledger.invocations.items()))}
+    path = os.path.join(report.out_dir, "BENCH_pricing.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    report.csv("oracle_pricing", hist["sum"] / points * 1e6 if points else 0.0,
+               f"points={points}_per_sec="
+               f"{doc['points_per_sec']}")
 
 
 def run(report, cell) -> None:
@@ -35,3 +77,4 @@ def run(report, cell) -> None:
     report.write("table1_characterization", lines)
     report.csv("table1_spans", wall * 1e6,
                f"lam={avg[0]:.2f}x/{avg[2]:.2f}x_area={avg[1]:.2f}x/{avg[3]:.2f}x")
+    _write_pricing(report)

@@ -31,6 +31,10 @@ over a batched synthesis oracle:
   * :mod:`repro.core.analysis` — schedule-aware static analysis: busy
     intervals + two-tier non-concurrency certificates, the independent
     PLM-plan race detector, and the repo lint driver (docs/analysis.md)
+  * :mod:`repro.core.obs` — the unified observability layer: span-based
+    tracing (deterministic under a logical clock, exportable as Chrome
+    ``trace_event``) and the metrics registry behind every counter
+    (docs/observability.md)
 """
 
 from .characterize import CharacterizationResult, characterize_component, spans
@@ -41,6 +45,8 @@ from .knobs import (CDFGFacts, KnobSpace, Region, Synthesis, SynthesisTool,
                     powers_of_two)
 from .mapping import MapOutcome, map_target, phi
 from .memgen import MemGen, PLM, PLMSpec
+from .obs import (Counter, Gauge, Histogram, LogicalClock, MetricsRegistry,
+                  NULL_TRACER, NullTracer, Span, Tracer, WallClock)
 from .oracle import (CountingTool, InvocationRecord, InvocationRequest,
                      Oracle, OracleBatchMixin, OracleLedger,
                      PersistentOracleCache, SharedOracle)
@@ -93,6 +99,8 @@ __all__ = [
     "phi", "map_target", "MapOutcome",
     "cosmos_dse", "CosmosResult", "exhaustive_dse", "ExhaustiveResult",
     "compose_exhaustive", "SystemPoint",
+    "Tracer", "Span", "NullTracer", "NULL_TRACER", "WallClock",
+    "LogicalClock", "MetricsRegistry", "Counter", "Gauge", "Histogram",
 ]
 
 

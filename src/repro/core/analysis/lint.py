@@ -21,6 +21,9 @@ SPEC004   static cost model broken (non-positive vmem/grid numbers)
 KNOB001   empty knob axis (no power-of-two port in [min, max])
 KNOB002   duplicate values on an axis (tile axis walked twice)
 KNOB003   non-positive tile size
+OBS001    an ``evaluate_batch`` implementation does not report per-point
+          outcomes to the tracer (no ``tracer``-rooted ``.span`` call
+          anywhere in the class — see docs/observability.md)
 ========  ==============================================================
 
 Exit status: 0 when every check passes, 1 otherwise (one line per
@@ -260,6 +263,72 @@ def _lint_knob_spaces(app, findings: List[LintFinding]) -> None:
 
 
 # ----------------------------------------------------------------------
+# observability: oracles must be traceable
+# ----------------------------------------------------------------------
+#: the modules whose classes implement ``Oracle.evaluate_batch`` — every
+#: such class must thread its points through the tracer so the per-point
+#: outcome partition (docs/observability.md) stays reconstructible
+_OBS_ORACLE_MODULES = ("repro.core.oracle", "repro.core.autotune")
+
+
+def _mentions_tracer(node) -> bool:
+    import ast
+    if isinstance(node, ast.Attribute):
+        return "tracer" in node.attr.lower() or _mentions_tracer(node.value)
+    if isinstance(node, ast.Name):
+        return "tracer" in node.id.lower()
+    if isinstance(node, ast.Call):
+        return _mentions_tracer(node.func)
+    return False
+
+
+def _lint_observability(findings: List[LintFinding]) -> None:
+    """OBS001: structurally verify that every class defining
+    ``evaluate_batch`` in the oracle modules reports its work to the
+    tracer — some ``<tracer>.span(...)`` (or ``.instant``/``.begin``)
+    call must appear in the class body, where ``<tracer>`` is an
+    expression rooted in a name containing "tracer" (``self.tracer``,
+    ``self._tracer()``, a ``tracer`` local)."""
+    import ast
+    import importlib
+    for modname in _OBS_ORACLE_MODULES:
+        try:
+            mod = importlib.import_module(modname)
+            with open(mod.__file__) as f:
+                tree = ast.parse(f.read(), filename=mod.__file__)
+        except Exception as e:        # noqa: BLE001 — lint reports, never dies
+            findings.append(LintFinding(
+                "OBS001", "repo", modname,
+                f"could not parse module: {type(e).__name__}: {e}"))
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            # Protocol classes declare the signature, they don't do work
+            protocol = any(isinstance(b, ast.Name) and b.id == "Protocol"
+                           for b in node.bases)
+            if protocol:
+                continue
+            defines = any(isinstance(b, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))
+                          and b.name == "evaluate_batch"
+                          for b in node.body)
+            if not defines:
+                continue
+            traced = any(
+                isinstance(n, ast.Attribute)
+                and n.attr in ("span", "instant", "begin")
+                and _mentions_tracer(n.value)
+                for n in ast.walk(node))
+            if not traced:
+                findings.append(LintFinding(
+                    "OBS001", "repo", f"{modname}.{node.name}",
+                    "evaluate_batch implementation never reports to the "
+                    "tracer (expected a tracer-rooted .span/.instant "
+                    "call somewhere in the class)"))
+
+
+# ----------------------------------------------------------------------
 # driver
 # ----------------------------------------------------------------------
 def lint_app(app) -> List[LintFinding]:
@@ -280,6 +349,7 @@ def lint_all(apps=None) -> List[LintFinding]:
     findings: List[LintFinding] = []
     for app in apps:
         findings.extend(lint_app(app))
+    _lint_observability(findings)     # repo-level, app-independent
     return sorted(findings, key=lambda f: (f.app, f.rule, f.subject,
                                            f.detail))
 

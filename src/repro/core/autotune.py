@@ -194,13 +194,27 @@ class XLAOracle:
                          unrolls=unrolls, states_per_iter=mb, feasible=True,
                          detail=detail)
 
+    #: class-level default, same convention as OracleBatchMixin: tracing
+    #: is off unless an instance is handed a real tracer
+    tracer = None
+
+    def _tracer(self):
+        from .obs import NULL_TRACER
+        return self.tracer if self.tracer is not None else NULL_TRACER
+
     def evaluate(self, request):
-        return self.synthesize(request.component, unrolls=request.unrolls,
-                               ports=request.ports,
-                               max_states=request.max_states)
+        with self._tracer().span("tool.point", component=request.component,
+                                 unrolls=request.unrolls,
+                                 ports=request.ports):
+            return self.synthesize(request.component,
+                                   unrolls=request.unrolls,
+                                   ports=request.ports,
+                                   max_states=request.max_states)
 
     def evaluate_batch(self, requests, *, workers: Optional[int] = None):
-        return [self.evaluate(r) for r in requests]   # pricing is cheap
+        reqs = list(requests)
+        with self._tracer().span("tool.batch", n=len(reqs)):
+            return [self.evaluate(r) for r in reqs]   # pricing is cheap
 
     def cdfg_facts(self, component: str, synth):
         from .knobs import CDFGFacts

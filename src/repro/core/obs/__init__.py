@@ -1,0 +1,60 @@
+"""Unified observability for the DSE engine and service.
+
+Two small, dependency-free primitives — a span tracer and a metrics
+registry — threaded through the whole stack (docs/observability.md):
+
+  * :mod:`repro.core.obs.trace` — ``Tracer.span(name, **attrs)``
+    context-manager spans with parent/child nesting, an injectable
+    clock (:class:`WallClock` live, :class:`LogicalClock` for
+    byte-stable CI artifacts), newline-JSON and Chrome ``trace_event``
+    exporters (Perfetto-openable);
+  * :mod:`repro.core.obs.metrics` — :class:`MetricsRegistry` with
+    lock-consistent counters, gauges, and fixed-bucket latency
+    histograms behind one ``snapshot()`` pull interface;
+  * :mod:`repro.core.obs.schema` — the trace-artifact schema CI
+    validates committed traces against
+    (``python -m repro.core.obs.schema``).
+
+Instrumented layers: :class:`~repro.core.session.ExplorationSession`
+phases, the oracle stack (:class:`~repro.core.oracle.OracleLedger` /
+:class:`~repro.core.oracle.SharedOracle` — every evaluated point
+carries an ``outcome`` tag from the four-way partition
+``fresh | cache_hit | inflight_join | replay``),
+:meth:`~repro.core.plm.planner.PLMPlanner.plan_point` (certificate
+tier chosen), and the :class:`~repro.serve.dse_service.DSEService`
+query lifecycle (submit -> queued -> dispatched -> done).
+"""
+
+from .metrics import (Counter, Gauge, Histogram, LATENCY_BUCKETS_S,
+                      MetricsRegistry)
+from .trace import (Clock, LogicalClock, NULL_TRACER, NullTracer, OUTCOMES,
+                    Span, Tracer, WallClock)
+
+__all__ = [
+    "Clock",
+    "WallClock",
+    "LogicalClock",
+    "Span",
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "LATENCY_BUCKETS_S",
+    "OUTCOMES",
+    "validate_chrome",
+    "validate_jsonl",
+]
+
+# schema is also a `python -m` entry point: importing it eagerly here
+# would double-import it under runpy (same rule as core.analysis)
+_SCHEMA_LAZY = {"validate_chrome", "validate_jsonl"}
+
+
+def __getattr__(name):
+    if name in _SCHEMA_LAZY:
+        from . import schema
+        return getattr(schema, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

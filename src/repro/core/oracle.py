@@ -36,6 +36,7 @@ from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
                     Tuple, runtime_checkable)
 
 from .knobs import CDFGFacts, Synthesis
+from .obs import NULL_TRACER, MetricsRegistry, OUTCOMES
 
 __all__ = [
     "InvocationRequest",
@@ -143,22 +144,43 @@ class OracleBatchMixin:
     """
 
     batch_workers: int = 8
+    #: class-level default: tracing is off unless a backend instance is
+    #: handed a real tracer (``tool.tracer = tracer``)
+    tracer = NULL_TRACER
 
     def evaluate(self, request: InvocationRequest) -> Synthesis:
-        return call_synthesize(self, request.component,
-                               unrolls=request.unrolls,
-                               ports=request.ports,
-                               max_states=request.max_states,
-                               tile=request.tile)
+        with self.tracer.span("tool.point", component=request.component,
+                              unrolls=request.unrolls,
+                              ports=request.ports, tile=request.tile):
+            return call_synthesize(self, request.component,
+                                   unrolls=request.unrolls,
+                                   ports=request.ports,
+                                   max_states=request.max_states,
+                                   tile=request.tile)
 
     def evaluate_batch(self, requests: Sequence[InvocationRequest],
                        *, workers: Optional[int] = None) -> List[Synthesis]:
         reqs = list(requests)
         n = workers or self.batch_workers
-        if len(reqs) <= 1 or n <= 1:
-            return [self.evaluate(r) for r in reqs]
-        with ThreadPoolExecutor(max_workers=min(n, len(reqs))) as pool:
-            return list(pool.map(self.evaluate, reqs))
+        with self.tracer.span("tool.batch", n=len(reqs)):
+            if len(reqs) <= 1 or n <= 1:
+                return [self.evaluate(r) for r in reqs]
+            with ThreadPoolExecutor(max_workers=min(n, len(reqs))) as pool:
+                return list(pool.map(self.evaluate, reqs))
+
+
+def _adopt_tracer(tool: Any, tracer: Any) -> None:
+    """Hand a ledger/shared-oracle tracer down to its tool so
+    ``tool.point``/``tool.batch`` spans land in the same trace.  Only
+    fills the vacancy: a tool already wired to a real tracer keeps it,
+    and tools without a ``tracer`` attribute are left alone."""
+    if tracer is NULL_TRACER:
+        return
+    if getattr(tool, "tracer", _adopt_tracer) in (None, NULL_TRACER):
+        try:
+            tool.tracer = tracer
+        except AttributeError:
+            pass
 
 
 # ----------------------------------------------------------------------
@@ -214,17 +236,25 @@ class PersistentOracleCache:
     """
 
     def __init__(self, root: Optional[str] = None, *, flush_every: int = 16,
-                 keep: int = 2, max_entries: Optional[int] = None):
+                 keep: int = 2, max_entries: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None, name: str = ""):
         if max_entries is not None and max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self.root = root
+        self.name = name
         self.flush_every = max(1, flush_every)
         self.keep = max(1, keep)
         self.max_entries = max_entries
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        # traffic counters live in a metrics registry (lock-consistent by
+        # construction); the historical bare-int names remain as read-only
+        # properties below
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        prefix = f"cache.{name}." if name else "cache."
+        self._hits = self.metrics.counter(prefix + "hits")
+        self._misses = self.metrics.counter(prefix + "misses")
+        self._evictions = self.metrics.counter(prefix + "evictions")
         self._entries: Dict[Key, Synthesis] = {}
+        self._restored: set = set()
         self._dirty = 0
         self._lock = threading.Lock()
         if root is not None:
@@ -252,11 +282,14 @@ class PersistentOracleCache:
             key = (comp, int(unrolls), int(ports),
                    None if max_states is None else int(max_states), tile)
             self._entries[key] = _synth_from_json(rec["synth"])
+            self._restored.add(key)
         if self.max_entries is not None:
             # a persisted cache larger than the bound trims oldest-first
             # (flush order is insertion order) — not counted as traffic
             while len(self._entries) > self.max_entries:
-                self._entries.pop(next(iter(self._entries)))
+                oldest = next(iter(self._entries))
+                self._entries.pop(oldest)
+                self._restored.discard(oldest)
 
     def flush(self) -> None:
         with self._lock:
@@ -288,28 +321,65 @@ class PersistentOracleCache:
         with self._lock:
             hit = self._entries.pop(key, None)
             if hit is None:
-                self.misses += 1
+                self._misses.inc()
                 return None
             self._entries[key] = hit          # re-insert: most recent
-            self.hits += 1
+            self._hits.inc()
             return hit
 
     def put(self, key: Key, synth: Synthesis) -> None:
         with self._lock:
             self._entries.pop(key, None)      # refresh recency on rewrite
+            self._restored.discard(key)       # freshly paid for, not replay
             self._entries[key] = synth
             if self.max_entries is not None:
                 while len(self._entries) > self.max_entries:
-                    self._entries.pop(next(iter(self._entries)))
-                    self.evictions += 1
+                    oldest = next(iter(self._entries))
+                    self._entries.pop(oldest)
+                    self._restored.discard(oldest)
+                    self._evictions.inc()
             self._dirty += 1
             if self._dirty >= self.flush_every:
                 self._flush_locked()
 
+    def was_restored(self, key: Key) -> bool:
+        """True when ``key``'s current entry came from the persisted
+        store rather than being paid for during this process — the
+        ``replay`` leg of the per-point outcome partition."""
+        with self._lock:
+            return key in self._restored
+
+    def consume_restored(self, key: Key) -> bool:
+        """:meth:`was_restored` with consume semantics: True exactly
+        once per restored entry.  The first serve from a restored
+        entry is the ``replay`` (it reconciles one-for-one against the
+        restored invocation accounting); after that the entry behaves
+        like any other cache entry and further serves are plain hits."""
+        with self._lock:
+            if key in self._restored:
+                self._restored.discard(key)
+                return True
+            return False
+
+    # historical bare-int counter names, now registry-backed (read-only)
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
+
     def stats(self) -> Dict[str, int]:
         with self._lock:
-            return {"entries": len(self._entries), "hits": self.hits,
-                    "misses": self.misses, "evictions": self.evictions}
+            entries = len(self._entries)
+        return {"entries": entries, "hits": self._hits.value,
+                "misses": self._misses.value,
+                "evictions": self._evictions.value}
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -364,16 +434,29 @@ class SharedOracle:
     """
 
     def __init__(self, tool, *, cache: Optional[PersistentOracleCache] = None,
-                 name: str = ""):
+                 name: str = "", tracer=None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.tool = tool
         self.cache = cache
         self.name = name
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        _adopt_tracer(tool, self.tracer)
         self.invocations: Dict[str, int] = {}
         self.failed: Dict[str, int] = {}
-        self.hits = 0               # answered from the shared cache
-        self.joins = 0              # coalesced onto an in-flight call
-        self.batches = 0            # dispatcher drains (evaluate_batch calls)
-        self.batch_retries = 0      # failed batches re-priced per point
+        # hits (answered from the shared cache), joins (coalesced onto an
+        # in-flight call), batches (dispatcher drains), batch_retries
+        # (failed batches re-priced per point): registry-backed counters —
+        # historically ``batches``/``batch_retries`` were bare ints bumped
+        # on the dispatcher thread with no lock at all
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        prefix = f"shared.{name}." if name else "shared."
+        self._hits = self.metrics.counter(prefix + "hits")
+        self._joins = self.metrics.counter(prefix + "joins")
+        self._batches = self.metrics.counter(prefix + "batches")
+        self._batch_retries = self.metrics.counter(prefix + "batch_retries")
+        self._outcome_counters = {
+            o: self.metrics.counter(prefix + "points." + o)
+            for o in OUTCOMES}
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._inflight: Dict[Key, _Flight] = {}
@@ -382,59 +465,77 @@ class SharedOracle:
         self._closed = False
 
     # -- submitter side ------------------------------------------------
-    def evaluate(self, request: InvocationRequest) -> Synthesis:
+    def evaluate(self, request: InvocationRequest, *,
+                 _parent=None) -> Synthesis:
         key = request.key
-        with self._cv:
-            if self._closed:
-                raise RuntimeError(f"SharedOracle {self.name!r} is closed")
-            if self.cache is not None:
-                hit = self.cache.get(key)
-                if hit is not None:
-                    self.hits += 1
-                    return hit
-            fl = self._inflight.get(key)
-            if fl is not None:
-                self.joins += 1
-            else:
-                fl = _Flight()
-                self._inflight[key] = fl
-                self._pending.append((request, fl))
-                # counted at dispatch admission, like the ledger's
-                # count-up-front rule (exceptions still count)
-                comp = request.component
-                self.invocations[comp] = self.invocations.get(comp, 0) + 1
-                if self._dispatcher is None:
-                    try:
-                        self._dispatcher = threading.Thread(
-                            target=self._dispatch_loop,
-                            name=("shared-oracle-"
-                                  f"{self.name or f'{id(self):x}'}"),
-                            daemon=True)
-                        self._dispatcher.start()
-                    except BaseException:
-                        # never strand a flight others could join: a
-                        # dispatcher that failed to start completes
-                        # nothing, so unregister before re-raising
-                        self._dispatcher = None
-                        self._inflight.pop(key, None)
-                        self._pending.remove((request, fl))
-                        raise
-                self._cv.notify_all()
-        fl.event.wait()
-        if fl.error is not None:
-            raise RuntimeError(f"shared oracle invocation failed for "
-                               f"{key}: {fl.error}") from fl.error
-        assert fl.result is not None
-        return fl.result
+        with self.tracer.span("shared.point", parent=_parent,
+                              component=request.component,
+                              unrolls=request.unrolls, ports=request.ports,
+                              tile=request.tile) as sp:
+            with self._cv:
+                if self._closed:
+                    raise RuntimeError(
+                        f"SharedOracle {self.name!r} is closed")
+                if self.cache is not None:
+                    hit = self.cache.get(key)
+                    if hit is not None:
+                        self._hits.inc()
+                        outcome = ("replay"
+                                   if self.cache.consume_restored(key)
+                                   else "cache_hit")
+                        sp.set("outcome", outcome)
+                        self._outcome_counters[outcome].inc()
+                        return hit
+                fl = self._inflight.get(key)
+                if fl is not None:
+                    self._joins.inc()
+                    sp.set("outcome", "inflight_join")
+                    self._outcome_counters["inflight_join"].inc()
+                else:
+                    fl = _Flight()
+                    self._inflight[key] = fl
+                    self._pending.append((request, fl))
+                    # counted at dispatch admission, like the ledger's
+                    # count-up-front rule (exceptions still count)
+                    comp = request.component
+                    self.invocations[comp] = \
+                        self.invocations.get(comp, 0) + 1
+                    sp.set("outcome", "fresh")
+                    self._outcome_counters["fresh"].inc()
+                    if self._dispatcher is None:
+                        try:
+                            self._dispatcher = threading.Thread(
+                                target=self._dispatch_loop,
+                                name=("shared-oracle-"
+                                      f"{self.name or f'{id(self):x}'}"),
+                                daemon=True)
+                            self._dispatcher.start()
+                        except BaseException:
+                            # never strand a flight others could join: a
+                            # dispatcher that failed to start completes
+                            # nothing, so unregister before re-raising
+                            self._dispatcher = None
+                            self._inflight.pop(key, None)
+                            self._pending.remove((request, fl))
+                            raise
+                    self._cv.notify_all()
+            fl.event.wait()
+            if fl.error is not None:
+                raise RuntimeError(f"shared oracle invocation failed for "
+                                   f"{key}: {fl.error}") from fl.error
+            assert fl.result is not None
+            return fl.result
 
     def evaluate_batch(self, requests: Sequence[InvocationRequest],
                        *, workers: Optional[int] = None) -> List[Synthesis]:
         reqs = list(requests)
-        if len(reqs) <= 1:
-            return [self.evaluate(r) for r in reqs]
-        with ThreadPoolExecutor(max_workers=min(workers or 8,
-                                                len(reqs))) as pool:
-            return list(pool.map(self.evaluate, reqs))
+        with self.tracer.span("shared.batch", n=len(reqs)) as sp:
+            if len(reqs) <= 1:
+                return [self.evaluate(r) for r in reqs]
+            with ThreadPoolExecutor(max_workers=min(workers or 8,
+                                                    len(reqs))) as pool:
+                return list(pool.map(
+                    lambda r: self.evaluate(r, _parent=sp), reqs))
 
     # -- dispatcher side -----------------------------------------------
     def _dispatch_loop(self) -> None:
@@ -449,42 +550,49 @@ class SharedOracle:
             self._run_batch(batch)
 
     def _call_one(self, req: InvocationRequest) -> Synthesis:
+        # prefer the Oracle protocol: it carries the tool.point span;
+        # bare SynthesisTools (synthesize only) are priced directly
         tool = self.tool
-        if hasattr(tool, "synthesize"):
-            return call_synthesize(tool, req.component,
-                                   unrolls=req.unrolls, ports=req.ports,
-                                   max_states=req.max_states, tile=req.tile)
-        return tool.evaluate(req)
+        if hasattr(tool, "evaluate"):
+            return tool.evaluate(req)
+        return call_synthesize(tool, req.component,
+                               unrolls=req.unrolls, ports=req.ports,
+                               max_states=req.max_states, tile=req.tile)
 
     def _run_batch(self, batch: List[Tuple[InvocationRequest, _Flight]]
                    ) -> None:
         reqs = [r for r, _ in batch]
-        self.batches += 1
+        self._batches.inc()
         outs: List[Optional[Synthesis]]
         errs: List[Optional[BaseException]]
-        try:
-            if len(reqs) > 1 and hasattr(self.tool, "evaluate_batch"):
-                outs = list(self.tool.evaluate_batch(reqs))
-            else:
-                outs = [self._call_one(r) for r in reqs]
-            errs = [None] * len(reqs)
-        except BaseException as batch_exc:  # noqa: BLE001
-            if len(reqs) == 1:
-                # already attributable — re-pricing would double-invoke
-                # the tool and mask the error on the retry
-                outs, errs = [None], [batch_exc]
-            else:
-                # one failing point must not take the whole drain down:
-                # re-price per point so the error lands on the right key(s)
-                self.batch_retries += 1
-                outs, errs = [], []
-                for r in reqs:
-                    try:
-                        outs.append(self._call_one(r))
-                        errs.append(None)
-                    except BaseException as exc:  # noqa: BLE001
-                        outs.append(None)
-                        errs.append(exc)
+        with self.tracer.span("shared.drain", n=len(reqs)) as sp:
+            try:
+                if len(reqs) > 1 and hasattr(self.tool, "evaluate_batch"):
+                    outs = list(self.tool.evaluate_batch(reqs))
+                else:
+                    outs = [self._call_one(r) for r in reqs]
+                errs = [None] * len(reqs)
+            except BaseException as batch_exc:  # noqa: BLE001
+                if len(reqs) == 1:
+                    # already attributable — re-pricing would
+                    # double-invoke the tool and mask the error on the
+                    # retry
+                    outs, errs = [None], [batch_exc]
+                else:
+                    # one failing point must not take the whole drain
+                    # down: re-price per point so the error lands on the
+                    # right key(s)
+                    self._batch_retries.inc()
+                    sp.set("retried", True)
+                    outs, errs = [], []
+                    for r in reqs:
+                        try:
+                            outs.append(self._call_one(r))
+                            errs.append(None)
+                        except BaseException as exc:  # noqa: BLE001
+                            outs.append(None)
+                            errs.append(exc)
+            sp.set("errors", sum(1 for e in errs if e is not None))
         for (req, fl), out, err in zip(batch, outs, errs):
             with self._cv:
                 if err is None:
@@ -516,21 +624,45 @@ class SharedOracle:
         return None if fn is None else fn(component, synth)
 
     # -- accounting ----------------------------------------------------
+    # historical bare-int counter names, now registry-backed (read-only)
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def joins(self) -> int:
+        return self._joins.value
+
+    @property
+    def batches(self) -> int:
+        return self._batches.value
+
+    @property
+    def batch_retries(self) -> int:
+        return self._batch_retries.value
+
     def total(self, component: Optional[str] = None) -> int:
         with self._lock:
             if component is not None:
                 return self.invocations.get(component, 0)
             return sum(self.invocations.values())
 
+    def outcome_counts(self) -> Dict[str, int]:
+        """Per-point outcome partition at the shared (cross-tenant)
+        level: ``fresh`` admissions to the dispatcher, shared-cache
+        ``cache_hit``/``replay``, and ``inflight_join`` waiters."""
+        return {o: c.value for o, c in self._outcome_counters.items()}
+
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             out: Dict[str, Any] = {
                 "invocations": sum(self.invocations.values()),
                 "failed": sum(self.failed.values()),
-                "hits": self.hits, "joins": self.joins,
-                "batches": self.batches,
-                "batch_retries": self.batch_retries,
+                "hits": self._hits.value, "joins": self._joins.value,
+                "batches": self._batches.value,
+                "batch_retries": self._batch_retries.value,
             }
+        out["outcomes"] = self.outcome_counts()
         if self.cache is not None:
             out["cache"] = self.cache.stats()
         return out
@@ -571,14 +703,25 @@ class OracleLedger:
     """
 
     def __init__(self, tool, *, cache: Optional[OracleCache] = None,
-                 workers: int = 8):
+                 workers: int = 8, tracer=None,
+                 metrics: Optional[MetricsRegistry] = None, name: str = ""):
         self.tool = tool
+        self.name = name
         self.workers = max(1, workers)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        _adopt_tracer(tool, self.tracer)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        prefix = f"oracle.{name}." if name else "oracle."
+        self._outcome_counters = {
+            o: self.metrics.counter(prefix + "points." + o)
+            for o in OUTCOMES}
+        self._invoke_hist = self.metrics.histogram(prefix + "invoke_wall_s")
         self.invocations: Dict[str, int] = {}
         self.failed: Dict[str, int] = {}
         self.records: List[InvocationRecord] = []
         self.phase: str = ""
         self._cache: Dict[Key, Synthesis] = {}
+        self._restored: set = set()
         self._persist = cache
         self._lock = threading.Lock()
         self._inflight: Dict[Key, threading.Event] = {}
@@ -589,6 +732,7 @@ class OracleLedger:
             # same per-phase record sums) as an uninterrupted one
             for key, synth in cache.entries().items():
                 self._cache[key] = synth
+                self._restored.add(key)
                 comp = key[0]
                 self.invocations[comp] = self.invocations.get(comp, 0) + 1
                 if not synth.feasible:
@@ -601,67 +745,94 @@ class OracleLedger:
 
     # ------------------------------------------------------------------
     def _call_tool(self, req: InvocationRequest) -> Synthesis:
+        # prefer the Oracle protocol: it carries the tool.point span;
+        # bare SynthesisTools (synthesize only) are priced directly
         tool = self.tool
-        if hasattr(tool, "synthesize"):
-            return call_synthesize(tool, req.component,
-                                   unrolls=req.unrolls, ports=req.ports,
-                                   max_states=req.max_states,
-                                   tile=req.tile)
-        return tool.evaluate(req)
+        if hasattr(tool, "evaluate"):
+            return tool.evaluate(req)
+        return call_synthesize(tool, req.component,
+                               unrolls=req.unrolls, ports=req.ports,
+                               max_states=req.max_states,
+                               tile=req.tile)
 
-    def evaluate(self, request: InvocationRequest) -> Synthesis:
+    def _note_outcome(self, sp, outcome: str) -> None:
+        # caller holds self._lock; Counter has its own (leaf) lock
+        sp.set("outcome", outcome)
+        self._outcome_counters[outcome].inc()
+
+    def evaluate(self, request: InvocationRequest, *,
+                 _parent=None) -> Synthesis:
         key = request.key
-        with self._lock:
-            hit = self._cache.get(key)
-            if hit is not None:
-                return hit
-            ev = self._inflight.get(key)
-            if ev is None:
-                ev = threading.Event()
-                self._inflight[key] = ev
-                self._errors.pop(key, None)      # a retry clears old failure
-                owner = True
-                # counted up-front, like the seed's CountingTool
-                comp = request.component
-                self.invocations[comp] = self.invocations.get(comp, 0) + 1
-            else:
-                owner = False
-        if not owner:
-            ev.wait()
+        with self.tracer.span("oracle.point", parent=_parent,
+                              component=request.component,
+                              unrolls=request.unrolls, ports=request.ports,
+                              tile=request.tile) as sp:
             with self._lock:
-                out = self._cache.get(key)
-                err = self._errors.get(key)
-            if out is None:
-                if err is not None:
+                hit = self._cache.get(key)
+                if hit is not None:
+                    if key in self._restored:
+                        # first serve from a restored entry: the replay
+                        # that reconciles against the restored total;
+                        # later serves are ordinary cache hits
+                        self._restored.discard(key)
+                        self._note_outcome(sp, "replay")
+                    else:
+                        self._note_outcome(sp, "cache_hit")
+                    return hit
+                ev = self._inflight.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[key] = ev
+                    self._errors.pop(key, None)  # a retry clears old failure
+                    owner = True
+                    # counted up-front, like the seed's CountingTool
+                    comp = request.component
+                    self.invocations[comp] = \
+                        self.invocations.get(comp, 0) + 1
+                    self._note_outcome(sp, "fresh")
+                else:
+                    owner = False
+                    self._note_outcome(sp, "inflight_join")
+            if not owner:
+                ev.wait()
+                with self._lock:
+                    out = self._cache.get(key)
+                    err = self._errors.get(key)
+                if out is None:
+                    if err is not None:
+                        raise RuntimeError(
+                            f"oracle invocation failed for {key}") from err
                     raise RuntimeError(
-                        f"oracle invocation failed for {key}") from err
-                raise RuntimeError(f"oracle invocation failed for {key}")
-            return out
-        t0 = time.monotonic()
-        try:
-            out = self._call_tool(request)
-        except BaseException as exc:
+                        f"oracle invocation failed for {key}")
+                return out
+            t0 = time.monotonic()
+            try:
+                out = self._call_tool(request)
+            except BaseException as exc:
+                with self._lock:
+                    self._errors[key] = exc
+                    self._inflight.pop(key, None)
+                ev.set()
+                raise
+            wall = time.monotonic() - t0
+            self._invoke_hist.observe(wall)
             with self._lock:
-                self._errors[key] = exc
+                if not out.feasible:
+                    comp = request.component
+                    self.failed[comp] = self.failed.get(comp, 0) + 1
+                self._cache[key] = out
+                self._restored.discard(key)   # paid for in this process
+                self.records.append(InvocationRecord(
+                    component=request.component, unrolls=request.unrolls,
+                    ports=request.ports, max_states=request.max_states,
+                    feasible=out.feasible, lam=out.lam, area=out.area,
+                    phase=self.phase, wall_s=wall,
+                    tile=request.tile))
                 self._inflight.pop(key, None)
             ev.set()
-            raise
-        with self._lock:
-            if not out.feasible:
-                comp = request.component
-                self.failed[comp] = self.failed.get(comp, 0) + 1
-            self._cache[key] = out
-            self.records.append(InvocationRecord(
-                component=request.component, unrolls=request.unrolls,
-                ports=request.ports, max_states=request.max_states,
-                feasible=out.feasible, lam=out.lam, area=out.area,
-                phase=self.phase, wall_s=time.monotonic() - t0,
-                tile=request.tile))
-            self._inflight.pop(key, None)
-        ev.set()
-        if self._persist is not None:
-            self._persist.put(key, out)
-        return out
+            if self._persist is not None:
+                self._persist.put(key, out)
+            return out
 
     def evaluate_batch(self, requests: Sequence[InvocationRequest],
                        *, workers: Optional[int] = None) -> List[Synthesis]:
@@ -670,13 +841,20 @@ class OracleLedger:
         Results come back in request order; duplicate keys inside the
         batch (and races with other concurrent callers) collapse to one
         tool call via the in-flight de-duplication in ``evaluate``.
+        The batch gets one ``oracle.batch`` span; each point's
+        ``oracle.point`` child carries its outcome tag (fan-out workers
+        parent to the batch span explicitly, since they run on pool
+        threads).
         """
         reqs = list(requests)
         n = self.workers if workers is None else max(1, workers)
-        if len(reqs) <= 1 or n <= 1:
-            return [self.evaluate(r) for r in reqs]
-        with ThreadPoolExecutor(max_workers=min(n, len(reqs))) as pool:
-            return list(pool.map(self.evaluate, reqs))
+        with self.tracer.span("oracle.batch", n=len(reqs),
+                              phase=self.phase) as sp:
+            if len(reqs) <= 1 or n <= 1:
+                return [self.evaluate(r) for r in reqs]
+            with ThreadPoolExecutor(max_workers=min(n, len(reqs))) as pool:
+                return list(pool.map(
+                    lambda r: self.evaluate(r, _parent=sp), reqs))
 
     # ------------------------------------------------------------------
     # Legacy CountingTool surface (the whole seed engine drives this)
@@ -705,6 +883,16 @@ class OracleLedger:
     def flush(self) -> None:
         if self._persist is not None:
             self._persist.flush()
+
+    def outcome_counts(self) -> Dict[str, int]:
+        """Per-point outcome partition as seen by this ledger:
+        ``fresh + cache_hit + inflight_join + replay`` partitions every
+        ``evaluate`` call, and ``fresh + replay == total()`` when every
+        restored entry is re-served (the standard resume; in general
+        ``replay`` counts only restored entries actually used, so
+        ``fresh + replay <= total()``) — the Fig. 11 trace-vs-ledger
+        reconciliation invariants."""
+        return {o: c.value for o, c in self._outcome_counters.items()}
 
     def records_by_phase(self) -> Dict[str, int]:
         out: Dict[str, int] = {}

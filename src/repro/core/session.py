@@ -36,6 +36,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 from .characterize import CharacterizationResult, characterize_component
 from .knobs import CDFGFacts, KnobSpace, Region
 from .mapping import MapOutcome, map_target
+from .obs import NULL_TRACER
 from .oracle import (OracleCache, OracleLedger, _synth_from_json,
                      _synth_to_json)
 from .pareto import DesignPoint, pareto_front_max_min
@@ -307,6 +308,7 @@ class ExplorationSession:
                  workers: int = 1,
                  memory_planner=None,
                  verify_plans: bool = False,
+                 tracer=None,
                  on_event: Optional[Callable[[ProgressEvent], None]] = None):
         self.tmg = tmg
         self.spaces = dict(spaces)
@@ -316,6 +318,14 @@ class ExplorationSession:
         self.memory_planner = memory_planner
         self.verify_plans = bool(verify_plans)
         self.on_event = on_event
+        if tracer is not None:
+            self.tracer = tracer
+        elif ledger is not None:
+            # one trace for the whole drive: adopt the ledger's tracer so
+            # phase spans and oracle.point spans land in the same export
+            self.tracer = getattr(ledger, "tracer", NULL_TRACER)
+        else:
+            self.tracer = NULL_TRACER
         if ledger is not None:
             if cache is not None:
                 raise ValueError("pass `cache` to the ledger's constructor "
@@ -324,7 +334,9 @@ class ExplorationSession:
                                  "ignored otherwise")
             self.ledger = ledger
         else:
-            self.ledger = OracleLedger(tool, cache=cache, workers=self.workers)
+            self.ledger = OracleLedger(tool, cache=cache,
+                                       workers=self.workers,
+                                       tracer=self.tracer)
         self._progress_lock = threading.Lock()
         # phase outputs (None = phase not run yet)
         self.characterizations: Optional[Dict[str, CharacterizationResult]] = None
@@ -336,6 +348,11 @@ class ExplorationSession:
 
     # -- plumbing ------------------------------------------------------
     def _emit(self, phase: str, label: str, done: int, total: int) -> None:
+        # progress is span-derived: the same tick that reaches on_event
+        # lands in the trace as a zero-duration instant, so callbacks
+        # (the legacy surface) and trace exports can never disagree
+        self.tracer.instant("session.progress", phase=phase, label=label,
+                            done=done, total=total)
         if self.on_event is not None:
             self.on_event(ProgressEvent(phase=phase, label=label,
                                         done=done, total=total))
@@ -362,20 +379,30 @@ class ExplorationSession:
             return self.characterizations
         self.ledger.phase = "characterize"
         work = [n for n in self._names() if n not in self.fixed]
-        self._emit("characterize", "", 0, len(work))
+        with self.tracer.span("session.characterize",
+                              components=len(work)) as phase_sp:
+            self._emit("characterize", "", 0, len(work))
 
-        done = [0]
+            done = [0]
 
-        def one(name: str) -> CharacterizationResult:
-            res = characterize_component(self.ledger, name, self.spaces[name])
-            with self._progress_lock:
-                done[0] += 1
-                n_done = done[0]
-            self._emit("characterize", name, n_done, len(work))
-            return res
+            def one(name: str) -> CharacterizationResult:
+                # explicit parent: under a fan-out this runs on a pool
+                # thread, where the thread-local stack is empty
+                with self.tracer.span("session.component",
+                                      parent=phase_sp,
+                                      component=name) as sp:
+                    res = characterize_component(self.ledger, name,
+                                                 self.spaces[name])
+                    sp.set("regions", len(res.regions))
+                    sp.set("invocations", res.invocations)
+                with self._progress_lock:
+                    done[0] += 1
+                    n_done = done[0]
+                self._emit("characterize", name, n_done, len(work))
+                return res
 
-        results = self._pool_map(one, work)
-        self.characterizations = dict(zip(work, results))
+            results = self._pool_map(one, work)
+            self.characterizations = dict(zip(work, results))
         self._build_models()
         return self.characterizations
 
@@ -398,10 +425,13 @@ class ExplorationSession:
         if self.models is None:
             self.characterize()
         self.ledger.phase = "plan"
-        self._emit("plan", "", 0, 1)
-        self.theta_min, self.theta_max = theta_bounds(self.tmg, self.models)
-        self.planned = sweep(self.tmg, self.models, self.delta)
-        self._emit("plan", f"{len(self.planned)} points", 1, 1)
+        with self.tracer.span("session.plan", delta=self.delta) as sp:
+            self._emit("plan", "", 0, 1)
+            self.theta_min, self.theta_max = theta_bounds(self.tmg,
+                                                          self.models)
+            self.planned = sweep(self.tmg, self.models, self.delta)
+            sp.set("points", len(self.planned))
+            self._emit("plan", f"{len(self.planned)} points", 1, 1)
         return self.planned
 
     # -- phase 3: synthesis mapping (phi) ------------------------------
@@ -412,48 +442,55 @@ class ExplorationSession:
             self.plan()
         self.ledger.phase = "map"
         planned = self.planned
-        self._emit("map", "", 0, len(planned))
-        done = [0]
+        with self.tracer.span("session.map",
+                              points=len(planned)) as phase_sp:
+            self._emit("map", "", 0, len(planned))
+            done = [0]
 
-        def one(plan_pt: PlanPoint) -> SystemPoint:
-            outcomes: List[MapOutcome] = []
-            lam_actual: Dict[str, float] = {}
-            cost_naive = 0.0
-            for name in self._names():
-                if name in self.fixed:
-                    lam_actual[name] = self.fixed[name]
-                    continue
-                out = map_target(self.ledger, name,
-                                 self.characterizations[name].regions,
-                                 plan_pt.lam_targets[name])
-                outcomes.append(out)
-                lam_actual[name] = out.synthesis.lam
-                cost_naive += out.synthesis.area
-            theta_actual = self.tmg.throughput(lam_actual)
-            cost_actual, cost_unshared, groups = cost_naive, None, ()
-            mem = None
-            if self.memory_planner is not None:
-                mem = self._plan_memory(plan_pt, outcomes)
-                cost_actual = mem.system_cost
-                cost_unshared = cost_naive
-                groups = tuple(g.members for g in mem.groups
-                               if len(g.members) > 1)
-            with self._progress_lock:
-                done[0] += 1
-                n_done = done[0]
-            self._emit("map", f"theta={plan_pt.theta:.3g}", n_done,
-                       len(planned))
-            return SystemPoint(theta_planned=plan_pt.theta,
-                               cost_planned=plan_pt.cost,
-                               theta_actual=theta_actual,
-                               cost_actual=cost_actual,
-                               outcomes=tuple(outcomes),
-                               cost_unshared=cost_unshared,
-                               plm_groups=groups,
-                               memory_plan=mem,
-                               schedule=plan_pt.schedule)
+            def one(plan_pt: PlanPoint) -> SystemPoint:
+                with self.tracer.span("session.map_point",
+                                      parent=phase_sp,
+                                      theta=plan_pt.theta) as sp:
+                    outcomes: List[MapOutcome] = []
+                    lam_actual: Dict[str, float] = {}
+                    cost_naive = 0.0
+                    for name in self._names():
+                        if name in self.fixed:
+                            lam_actual[name] = self.fixed[name]
+                            continue
+                        out = map_target(self.ledger, name,
+                                         self.characterizations[name].regions,
+                                         plan_pt.lam_targets[name])
+                        outcomes.append(out)
+                        lam_actual[name] = out.synthesis.lam
+                        cost_naive += out.synthesis.area
+                    theta_actual = self.tmg.throughput(lam_actual)
+                    cost_actual, cost_unshared, groups = cost_naive, None, ()
+                    mem = None
+                    if self.memory_planner is not None:
+                        mem = self._plan_memory(plan_pt, outcomes)
+                        cost_actual = mem.system_cost
+                        cost_unshared = cost_naive
+                        groups = tuple(g.members for g in mem.groups
+                                       if len(g.members) > 1)
+                    sp.set("theta_actual", theta_actual)
+                    sp.set("cost_actual", cost_actual)
+                with self._progress_lock:
+                    done[0] += 1
+                    n_done = done[0]
+                self._emit("map", f"theta={plan_pt.theta:.3g}", n_done,
+                           len(planned))
+                return SystemPoint(theta_planned=plan_pt.theta,
+                                   cost_planned=plan_pt.cost,
+                                   theta_actual=theta_actual,
+                                   cost_actual=cost_actual,
+                                   outcomes=tuple(outcomes),
+                                   cost_unshared=cost_unshared,
+                                   plm_groups=groups,
+                                   memory_plan=mem,
+                                   schedule=plan_pt.schedule)
 
-        self.mapped = self._pool_map(one, planned)
+            self.mapped = self._pool_map(one, planned)
         return self.mapped
 
     def _plan_memory(self, plan_pt: PlanPoint,
@@ -464,13 +501,14 @@ class ExplorationSession:
         import inspect
         synths = {o.component: o.synthesis for o in outcomes}
         planner = self.memory_planner
-        takes_schedule = ("schedule"
-                          in inspect.signature(planner.plan_point).parameters)
-        if takes_schedule:
-            mem = planner.plan_point(self.ledger, synths,
-                                     schedule=plan_pt.schedule)
-        else:                      # pre-schedule custom planners
-            mem = planner.plan_point(self.ledger, synths)
+        params = inspect.signature(planner.plan_point).parameters
+        kwargs: Dict[str, Any] = {}
+        if "schedule" in params:
+            kwargs["schedule"] = plan_pt.schedule
+        if "tracer" in params:
+            kwargs["tracer"] = self.tracer
+        # pre-schedule / pre-tracer custom planners get neither keyword
+        mem = planner.plan_point(self.ledger, synths, **kwargs)
         if self.verify_plans:
             from .analysis.verify import assert_plan_sound
             assert_plan_sound(mem, self.tmg, plan_pt.schedule)

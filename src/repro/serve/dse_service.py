@@ -47,6 +47,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Tuple, Union
 
+from ..core.obs import NULL_TRACER, MetricsRegistry
 from ..core.oracle import OracleLedger, PersistentOracleCache, SharedOracle
 from ..core.registry import build_query_session, build_tool, get_app, get_backend
 from ..core.session import CosmosResult, DSEQuery
@@ -81,6 +82,12 @@ class QueryHandle:
         self._result: Optional[CosmosResult] = None
         self._error: Optional[BaseException] = None
         self._event = threading.Event()
+        # lifecycle spans, installed by DSEService.submit: the root
+        # ``service.query`` span (submit -> completion) and its
+        # ``service.queued`` child (submit -> dispatch)
+        self._span = None
+        self._queued_span = None
+        self._submit_t = 0.0
 
     # -- poll ----------------------------------------------------------
     def done(self) -> bool:
@@ -112,6 +119,11 @@ class QueryHandle:
     def invocations(self) -> Dict[str, int]:
         """The tenant's attributed per-component invocation counts."""
         return dict(self.ledger.invocations) if self.ledger else {}
+
+    def outcome_counts(self) -> Dict[str, int]:
+        """The tenant ledger's per-point outcome partition
+        (``fresh | cache_hit | inflight_join | replay``)."""
+        return self.ledger.outcome_counts() if self.ledger else {}
 
     # -- service side --------------------------------------------------
     def _finish(self, result: Optional[CosmosResult],
@@ -163,7 +175,9 @@ class DSEService:
                  cache_entries: Optional[int] = None,
                  cache_root: Optional[str] = None,
                  flush_every: int = 16,
-                 verify_plans: bool = False):
+                 verify_plans: bool = False,
+                 tracer=None,
+                 metrics: Optional[MetricsRegistry] = None):
         if max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.max_pending = max_pending
@@ -171,6 +185,22 @@ class DSEService:
         self.cache_root = cache_root
         self.flush_every = flush_every
         self.verify_plans = verify_plans
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # one registry for the whole service: the query counters below,
+        # queue-wait/latency histograms, per-pool shared-oracle and cache
+        # counters, and per-tenant ledger outcome counters all land here;
+        # ``stats()`` embeds its snapshot
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._submitted = self.metrics.counter("service.submitted")
+        self._done = self.metrics.counter("service.done")
+        self._failed = self.metrics.counter("service.failed")
+        self._rejected = self.metrics.counter("service.rejected_busy")
+        self._tenant_invocations = self.metrics.counter(
+            "service.tenant_invocations")
+        self._queued_g = self.metrics.gauge("service.queued")
+        self._running_g = self.metrics.gauge("service.running")
+        self._queue_wait_h = self.metrics.histogram("service.queue_wait_s")
+        self._latency_h = self.metrics.histogram("service.latency_s")
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._queue: Deque[QueryHandle] = deque()
@@ -178,11 +208,6 @@ class DSEService:
         self._closed = False
         self._next_qid = 0
         self._running = 0
-        self._submitted = 0
-        self._done = 0
-        self._failed = 0
-        self._rejected = 0
-        self._tenant_invocations = 0
         self._workers = [threading.Thread(target=self._worker_loop,
                                           name=f"dse-service-{i}",
                                           daemon=True)
@@ -213,22 +238,34 @@ class DSEService:
                 reason = (f"queue full ({self.max_pending} pending); "
                           f"resubmit later")
                 if not block:
-                    self._rejected += 1
+                    self._rejected.inc()
+                    self.tracer.instant("service.rejected",
+                                        tenant=query.tenant, app=query.app)
                     return Busy(reason)
                 remaining = (None if deadline is None
                              else deadline - time.monotonic())
                 if remaining is not None and remaining <= 0:
-                    self._rejected += 1
+                    self._rejected.inc()
                     return Busy(reason + f" (timed out after {timeout}s)")
                 if not self._cv.wait(remaining):
-                    self._rejected += 1
+                    self._rejected.inc()
                     return Busy(reason + f" (timed out after {timeout}s)")
                 if self._closed:
                     raise RuntimeError("DSEService is closed")
             handle = QueryHandle(self._next_qid, query)
             self._next_qid += 1
-            self._submitted += 1
+            self._submitted.inc()
+            # the query's root span opens at submit and is finished by
+            # the worker at completion; its first child covers the
+            # queue-wait (finished at dispatch)
+            handle._span = self.tracer.begin(
+                "service.query", qid=handle.qid, tenant=query.tenant,
+                app=query.app, backend=query.backend)
+            handle._queued_span = self.tracer.begin(
+                "service.queued", parent=handle._span, qid=handle.qid)
+            handle._submit_t = time.monotonic()
             self._queue.append(handle)
+            self._queued_g.set(len(self._queue))
             self._cv.notify_all()
         return handle
 
@@ -255,13 +292,16 @@ class DSEService:
                         f"{self.cache_root}/{slug}")
                 cache = PersistentOracleCache(
                     root, flush_every=self.flush_every,
-                    max_entries=self.cache_entries)
+                    max_entries=self.cache_entries,
+                    metrics=self.metrics, name=slug)
                 tool = build_tool(query.app, query.backend,
                                   share_plm=query.share_plm,
                                   tiles=query.tiles)
                 pool = _Pool(slug=slug, cache=cache,
                              oracle=SharedOracle(tool, cache=cache,
-                                                 name=slug))
+                                                 name=slug,
+                                                 tracer=self.tracer,
+                                                 metrics=self.metrics))
                 self._pools[key] = pool
             pool.tenants += 1
             return pool
@@ -276,35 +316,54 @@ class DSEService:
                     return                   # closed and drained
                 handle = self._queue.popleft()
                 self._running += 1
+                self._queued_g.set(len(self._queue))
+                self._running_g.set(self._running)
                 self._cv.notify_all()        # a queue slot freed up
             try:
                 self._run(handle)
             finally:
                 with self._cv:
                     self._running -= 1
+                    self._running_g.set(self._running)
                     self._cv.notify_all()
 
     def _run(self, handle: QueryHandle) -> None:
         handle.status = "running"
+        handle._queued_span.finish()         # queue-wait ends at dispatch
+        self._queue_wait_h.observe(time.monotonic() - handle._submit_t)
         t0 = time.monotonic()
+        tenant = handle.query.tenant or f"q{handle.qid}"
         try:
             pool = self._pool(handle.query)
             ledger = OracleLedger(pool.oracle,
-                                  workers=handle.query.workers)
+                                  workers=handle.query.workers,
+                                  tracer=self.tracer,
+                                  metrics=self.metrics, name=tenant)
             handle.ledger = ledger
-            session = build_query_session(handle.query, ledger=ledger,
-                                          verify_plans=self.verify_plans)
-            result = session.run()
+            # a context-managed child of the query's root span: the
+            # session (which adopts the ledger's tracer) nests its phase
+            # spans under it via this worker thread's span stack
+            with self.tracer.span("service.run", parent=handle._span,
+                                  qid=handle.qid, tenant=tenant,
+                                  pool=pool.slug):
+                session = build_query_session(
+                    handle.query, ledger=ledger,
+                    verify_plans=self.verify_plans)
+                result = session.run()
         except BaseException as exc:  # noqa: BLE001 — isolated per tenant
             handle.wall_s = time.monotonic() - t0
-            with self._lock:
-                self._failed += 1
+            self._latency_h.observe(handle.wall_s)
+            self._failed.inc()
+            handle._span.set("status", "failed")
+            handle._span.finish(exc)
             handle._finish(None, exc)
             return
         handle.wall_s = time.monotonic() - t0
-        with self._lock:
-            self._done += 1
-            self._tenant_invocations += ledger.total()
+        self._latency_h.observe(handle.wall_s)
+        self._done.inc()
+        self._tenant_invocations.inc(ledger.total())
+        handle._span.set("invocations", ledger.total())
+        handle._span.finish()
         handle._finish(result, None)
 
     # -- introspection -------------------------------------------------
@@ -317,20 +376,27 @@ class DSEService:
         return sum(p.oracle.total() for p in pools)
 
     def stats(self) -> Dict[str, Any]:
+        """Service-wide picture: the historical query/pool summary plus
+        ``metrics`` — the full registry snapshot (counters, gauges,
+        queue-wait/latency histograms, per-pool cache and shared-oracle
+        counters, per-tenant outcome partitions).  See
+        docs/observability.md for the field inventory."""
         with self._lock:
             pools = dict(self._pools)
             out: Dict[str, Any] = {
-                "queries": {"submitted": self._submitted,
-                            "done": self._done, "failed": self._failed,
-                            "rejected_busy": self._rejected,
+                "queries": {"submitted": self._submitted.value,
+                            "done": self._done.value,
+                            "failed": self._failed.value,
+                            "rejected_busy": self._rejected.value,
                             "queued": len(self._queue),
                             "running": self._running},
-                "tenant_invocations": self._tenant_invocations,
+                "tenant_invocations": self._tenant_invocations.value,
             }
         out["pools"] = {p.slug: dict(p.oracle.stats(), tenants=p.tenants)
                         for p in pools.values()}
         out["shared_invocations"] = sum(
             p.oracle.total() for p in pools.values())
+        out["metrics"] = self.metrics.snapshot()
         return out
 
     # -- lifecycle -----------------------------------------------------
@@ -348,8 +414,10 @@ class DSEService:
             self._closed = True
             self._cv.notify_all()
         for h in abandoned:
-            h._finish(None, RuntimeError(
-                "DSEService closed before this query ran"))
+            err = RuntimeError("DSEService closed before this query ran")
+            h._queued_span.finish(err)
+            h._span.finish(err)
+            h._finish(None, err)
         for t in self._workers:
             t.join()
         for pool in self._pools.values():
