@@ -24,10 +24,35 @@ import sys
 import time
 
 # the WAMI system Pareto, on both oracle families; share_plm is the
-# memory-co-design variant (tile axis + shared-PLM system cost) — a
-# cell axis, not a global flag
+# memory-co-design variant (tile axis + shared-PLM system cost),
+# tiles the multi-recording routing drive (measured backends with
+# >= 2 recordings on disk), workers1 the fan-out determinism gate —
+# all cell axes, not global flags
 SCENARIOS = {"apps": ("wami",), "backends": "*",
-             "variants": ("", "share_plm")}
+             "variants": ("", "share_plm", "tiles", "workers1")}
+
+
+def cell_skip_reason(app, backend, variant):
+    """Tighten the default check for the new variants: ``tiles``
+    replays multiple recordings (measured backends with >= 2 tiles on
+    disk only); ``workers1`` runs everywhere the base cell does."""
+    try:
+        from .scenarios import default_skip_reason
+    except ImportError:                      # standalone bench path
+        from scenarios import default_skip_reason
+    base = "share_plm" if variant in ("share_plm", "tiles") else ""
+    reason = default_skip_reason(app, backend, base)
+    if reason:
+        return reason
+    if variant == "tiles":
+        if not backend.measured:
+            return (f"tiles variant routes multiple recordings; backend "
+                    f"{backend.name!r} has no measured surface")
+        tiles = backend.supported_tiles(app)
+        if len(tiles) < 2:
+            return (f"tiles variant needs >= 2 recordings on disk; app "
+                    f"{app.name!r} has {sorted(tiles)}")
+    return None
 
 
 def _share_plm_result(backend: str, workers: int = 8):
@@ -67,8 +92,70 @@ def _plans_doc(res) -> dict:
     return {"app": "wami", "points": points}
 
 
+def _run_tiles(report, cell) -> None:
+    """The multi-recording drive: the shared-PLM front with *every*
+    checked-in recording routed through the :class:`MeasurementSet`
+    (the classic share_plm cell replays only the native tile and prices
+    the rest through the calibrated fallback)."""
+    from repro.apps.wami.pallas import wami_plm_session
+    from repro.core.registry import get_app, get_backend
+    tiles = tuple(sorted(
+        get_backend(cell.backend).supported_tiles(get_app("wami"))))[:2]
+    t0 = time.time()
+    res = wami_plm_session(0.25, measured_tiles=tiles, workers=8,
+                           verify_plans=True).run()
+    wall = time.time() - t0
+    lines = [f"# Fig. 10 tiles variant — shared-PLM WAMI front, "
+             f"multi-recording routing (backend={cell.backend}, "
+             f"measured tiles {'+'.join(str(t) for t in tiles)})",
+             "theta_mapped_fps,cost_mapped_bytes,cost_unshared"]
+    for m in sorted(res.mapped, key=lambda m: (m.theta_actual,
+                                               m.cost_actual)):
+        lines.append(f"{m.theta_actual:.2f},{m.cost_actual:.3f},"
+                     f"{m.cost_unshared:.3f}")
+    lines.append(f"# {len(res.mapped)} points; recordings routed: "
+                 + ",".join(str(t) for t in tiles)
+                 + " (vs native-only in the share_plm cell)")
+    report.write(f"fig10_pareto_{cell.backend}_tiles", lines)
+    report.csv(f"fig10_pareto_{cell.backend}_tiles", wall * 1e6,
+               f"points={len(res.mapped)}_tiles="
+               + "+".join(str(t) for t in tiles))
+
+
+def _run_workers1(report, cell) -> None:
+    """The fan-out determinism gate as a matrix cell: the workers=1
+    sequential drive must produce the same front — point for point,
+    knob for knob — as the workers=8 batched drive."""
+    from repro.core.registry import build_session
+    backend = cell.backend
+    cost_unit = "vmem_bytes" if backend == "pallas" else "mm2"
+    t0 = time.time()
+    front1 = build_session("wami", backend, workers=1).run().pareto()
+    front8 = build_session("wami", backend, workers=8).run().pareto()
+    wall = time.time() - t0
+    sig1 = repr([(p.perf, p.cost, p.knobs) for p in front1])
+    sig8 = repr([(p.perf, p.cost, p.knobs) for p in front8])
+    assert sig1 == sig8, (f"workers=1 front differs from workers=8 "
+                          f"fan-out on backend {backend!r}")
+    lines = [f"# Fig. 10 workers1 variant — WAMI front under workers=1 "
+             f"(backend={backend})",
+             f"theta_fps,cost_{cost_unit}"]
+    for p in front1:
+        lines.append(f"{p.perf:.2f},{p.cost:.3f}")
+    lines.append(f"# {len(front1)} points, byte-identical to the "
+                 f"workers=8 batched drive (repr-compared, knobs "
+                 f"included)")
+    report.write(f"fig10_pareto_{backend}_workers1", lines)
+    report.csv(f"fig10_pareto_{backend}_workers1", wall * 1e6,
+               f"points={len(front1)}_deterministic=yes")
+
+
 def run(report, cell) -> None:
     from repro.core.registry import build_session
+    if cell.variant == "tiles":
+        return _run_tiles(report, cell)
+    if cell.variant == "workers1":
+        return _run_workers1(report, cell)
     backend = cell.backend
     share_plm = cell.variant == "share_plm"
     t0 = time.time()

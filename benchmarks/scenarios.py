@@ -53,6 +53,7 @@ BENCH_MODULES: Dict[str, str] = {
     "kernels": "kernels_micro",
     "autoshard": "autoshard_llm",
     "fleet": "fleet_dse",
+    "soc": "soc_compose",
 }
 
 

@@ -101,6 +101,8 @@ __all__ = [
     "compose_exhaustive", "SystemPoint",
     "Tracer", "Span", "NullTracer", "NULL_TRACER", "WallClock",
     "LogicalClock", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "SoCBudget", "TrafficMix", "AppDemand", "SoCComposer", "Composition",
+    "BudgetInfeasibleError", "verify_composition",
 ]
 
 
@@ -115,8 +117,19 @@ _ANALYSIS_LAZY = {
 }
 
 
+# same rule for the SoC composition layer (compose/verify are
+# `python -m` entry points too)
+_SOC_LAZY = {
+    "SoCBudget", "TrafficMix", "AppDemand", "SoCComposer", "Composition",
+    "BudgetInfeasibleError", "verify_composition",
+}
+
+
 def __getattr__(name):
     if name in _ANALYSIS_LAZY:
         from . import analysis
         return getattr(analysis, name)
+    if name in _SOC_LAZY:
+        from . import soc
+        return getattr(soc, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

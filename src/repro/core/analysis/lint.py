@@ -24,6 +24,9 @@ KNOB003   non-positive tile size
 OBS001    an ``evaluate_batch`` implementation does not report per-point
           outcomes to the tracer (no ``tracer``-rooted ``.span`` call
           anywhere in the class — see docs/observability.md)
+SOC001    a committed ``*.composition.json`` artifact lacks budget or
+          traffic-mix provenance (the independent re-checker
+          ``python -m repro.core.soc.verify`` needs both — docs/soc.md)
 ========  ==============================================================
 
 Exit status: 0 when every check passes, 1 otherwise (one line per
@@ -329,6 +332,63 @@ def _lint_observability(findings: List[LintFinding]) -> None:
 
 
 # ----------------------------------------------------------------------
+# SoC composition artifacts: provenance must be embedded
+# ----------------------------------------------------------------------
+#: the keys a composition's budget / mix provenance blocks must carry
+#: for ``python -m repro.core.soc.verify`` to re-prove it standalone
+_SOC_BUDGET_KEYS = ("name", "area_mm2", "power_w", "bw_gbps", "tech_nm")
+_SOC_MIX_KEYS = ("name", "demands")
+
+
+def _lint_soc_artifacts(findings: List[LintFinding],
+                        root: str = "artifacts/bench") -> None:
+    """SOC001: every committed ``*.composition.json`` must embed the
+    budget and traffic-mix provenance it was composed under — the
+    artifact is the cross-environment source of truth, so a composition
+    whose envelopes or demands live only in the process that wrote it
+    cannot be independently re-proved."""
+    import glob
+    pattern = os.path.join(root, "**", "*.composition.json")
+    for path in sorted(glob.glob(pattern, recursive=True)):
+        subject = os.path.relpath(path, root)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            findings.append(LintFinding(
+                "SOC001", "repo", subject,
+                f"unreadable composition JSON: {e}"))
+            continue
+        budget = doc.get("budget")
+        if not isinstance(budget, dict):
+            findings.append(LintFinding(
+                "SOC001", "repo", subject,
+                "no 'budget' provenance block (dict expected)"))
+        else:
+            for key in _SOC_BUDGET_KEYS:
+                if key not in budget:
+                    findings.append(LintFinding(
+                        "SOC001", "repo", subject,
+                        f"budget provenance lacks {key!r}"))
+        mix = doc.get("mix")
+        if not isinstance(mix, dict):
+            findings.append(LintFinding(
+                "SOC001", "repo", subject,
+                "no 'mix' provenance block (dict expected)"))
+        else:
+            for key in _SOC_MIX_KEYS:
+                if key not in mix:
+                    findings.append(LintFinding(
+                        "SOC001", "repo", subject,
+                        f"mix provenance lacks {key!r}"))
+            if not mix.get("demands"):
+                findings.append(LintFinding(
+                    "SOC001", "repo", subject,
+                    "mix provenance has no demands — a composition of "
+                    "nothing proves nothing"))
+
+
+# ----------------------------------------------------------------------
 # driver
 # ----------------------------------------------------------------------
 def lint_app(app) -> List[LintFinding]:
@@ -350,6 +410,7 @@ def lint_all(apps=None) -> List[LintFinding]:
     for app in apps:
         findings.extend(lint_app(app))
     _lint_observability(findings)     # repo-level, app-independent
+    _lint_soc_artifacts(findings)     # repo-level, artifact provenance
     return sorted(findings, key=lambda f: (f.app, f.rule, f.subject,
                                            f.detail))
 

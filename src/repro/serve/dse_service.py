@@ -152,6 +152,10 @@ class _Pool:
     oracle: SharedOracle
     cache: PersistentOracleCache
     tenants: int = 0            # queries that ran through this pool
+    # per-delta Pareto-front cardinality of the most recent completed
+    # query (``{"delta=0.25": 7, ...}``) — the SoC composer and
+    # operators read front sizes from ``stats()`` without re-running
+    front_sizes: Dict[str, int] = field(default_factory=dict)
 
 
 class DSEService:
@@ -350,6 +354,9 @@ class DSEService:
                     handle.query, ledger=ledger,
                     verify_plans=self.verify_plans)
                 result = session.run()
+            with self._lock:
+                pool.front_sizes[f"delta={session.delta:g}"] = \
+                    len(result.pareto())
         except BaseException as exc:  # noqa: BLE001 — isolated per tenant
             handle.wall_s = time.monotonic() - t0
             self._latency_h.observe(handle.wall_s)
@@ -383,6 +390,8 @@ class DSEService:
         docs/observability.md for the field inventory."""
         with self._lock:
             pools = dict(self._pools)
+            front_sizes = {p.slug: dict(sorted(p.front_sizes.items()))
+                           for p in pools.values()}
             out: Dict[str, Any] = {
                 "queries": {"submitted": self._submitted.value,
                             "done": self._done.value,
@@ -392,7 +401,8 @@ class DSEService:
                             "running": self._running},
                 "tenant_invocations": self._tenant_invocations.value,
             }
-        out["pools"] = {p.slug: dict(p.oracle.stats(), tenants=p.tenants)
+        out["pools"] = {p.slug: dict(p.oracle.stats(), tenants=p.tenants,
+                                     front_sizes=front_sizes[p.slug])
                         for p in pools.values()}
         out["shared_invocations"] = sum(
             p.oracle.total() for p in pools.values())

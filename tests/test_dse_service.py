@@ -139,6 +139,28 @@ def test_concurrent_tenants_match_isolated_runs():
     assert pool_a["hits"] + pool_a["joins"] > 0
 
 
+def test_stats_reports_per_pool_front_sizes():
+    """``stats()['pools'][slug]['front_sizes']`` maps each completed
+    delta label to that query's Pareto-front cardinality — the sizing
+    signal the SoC composition layer reads off a running service
+    (docs/soc.md) without re-running any exploration."""
+    queries = [
+        DSEQuery(app="svc-toy-a", delta=0.5, tenant="s0"),
+        DSEQuery(app="svc-toy-a", delta=0.4, tenant="s1"),
+        DSEQuery(app="svc-toy-b", delta=0.5, tenant="s2"),
+    ]
+    with DSEService(max_pending=4, workers=2) as svc:
+        handles = svc.submit_all(queries)
+        fronts = {h.query.tenant: len(h.result(timeout=60).pareto())
+                  for h in handles}
+        stats = svc.stats()
+    assert stats["pools"]["svc-toy-a-analytical"]["front_sizes"] == {
+        "delta=0.5": fronts["s0"], "delta=0.4": fronts["s1"]}
+    assert stats["pools"]["svc-toy-b-analytical"]["front_sizes"] == {
+        "delta=0.5": fronts["s2"]}
+    assert all(n >= 1 for n in fronts.values())
+
+
 # ----------------------------------------------------------------------
 # (2) randomized tenant mixes / interleavings (property test)
 # ----------------------------------------------------------------------
