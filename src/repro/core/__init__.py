@@ -61,6 +61,9 @@ from .pallas_oracle import (MeasurementSet, MeasurementStore,
 from .registry import (App, Backend, build_query_session, build_session,
                        build_tool, get_app, get_backend, list_apps,
                        list_backends, register_app, register_backend)
+from .pricing import BatchPricer
+from .surrogate import (GuidedCharacterization, RidgeSurrogate,
+                        guided_characterize_component)
 from .pareto import (DesignPoint, check_delta_curve, dominates_max_min,
                      dominates_min_min, pareto_front_max_min,
                      pareto_front_min_min, span)
@@ -91,6 +94,8 @@ __all__ = [
     "ExplorationSession", "ProgressEvent", "DSEQuery",
     "ComponentSpec", "LoopNest", "HLSTool", "MemGen", "PLM", "PLMSpec",
     "CharacterizationResult", "characterize_component", "spans",
+    "BatchPricer", "RidgeSurrogate", "GuidedCharacterization",
+    "guided_characterize_component",
     "ComponentModel", "PiecewiseLinearCost", "PlanPoint", "Schedule",
     "plan", "sweep", "theta_bounds",
     "BusyInterval", "ScheduleCertificate", "schedule_exclusive_pairs",

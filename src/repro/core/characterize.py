@@ -71,6 +71,7 @@ def characterize_component(tool: OracleLedger, component: str,
     this are still counted, as in Fig. 11.
     """
     before = tool.total(component)
+    failed_before = tool.failed.get(component, 0)
     regions: List[Region] = []
     points: List[DesignPoint] = []
 
@@ -136,7 +137,9 @@ def characterize_component(tool: OracleLedger, component: str,
                     points.append(_point(component, ul))
 
     invocations = tool.total(component) - before
-    failed = tool.failed.get(component, 0)
+    # per-run delta, like `invocations`: a pre-warmed ledger (restored
+    # cache, repeated characterization) must not double-count failures
+    failed = tool.failed.get(component, 0) - failed_before
     return CharacterizationResult(component=component, regions=regions,
                                   points=points, invocations=invocations,
                                   failed=failed)

@@ -148,6 +148,21 @@ class HLSTool(OracleBatchMixin):
                 return specs[component]
         return base.retile(tile)
 
+    def grid_inputs(self, component: str, tile: int
+                    ) -> "tuple[ComponentSpec, int]":
+        """``(spec, tile_key)`` the scheduler prices at this tile.
+
+        ``tile_key`` is 0 when retiling left the spec unchanged — the
+        noise hash must then match the two-knob key exactly (see
+        ``_states_per_iter``).  This is the whole-grid pricer's view of
+        a component (:mod:`repro.core.pricing` prices every
+        ``(ports, unrolls)`` point of one ``grid_inputs`` result in a
+        single array dispatch).
+        """
+        base = self.components[component]
+        spec = self._spec_at(component, tile)
+        return spec, (0 if spec == base else tile)
+
     # ------------------------------------------------------------------
     # Scheduling model
     # ------------------------------------------------------------------
@@ -209,9 +224,7 @@ class HLSTool(OracleBatchMixin):
     def synthesize(self, component: str, *, unrolls: int, ports: int,
                    max_states: Optional[int] = None,
                    clock_ns: float = 1.0, tile: int = 0) -> Synthesis:
-        base = self.components[component]
-        spec = self._spec_at(component, tile)
-        tile_key = 0 if spec == base else tile
+        spec, tile_key = self.grid_inputs(component, tile)
         states = self._states_per_iter(spec, unrolls, ports, tile_key)
         if max_states is not None and states > max_states:
             # lambda-constraint violated: the synthesis fails and the

@@ -389,6 +389,8 @@ def build_session(app: App | str, backend: Backend | str = "analytical",
                   tiles: Optional[Sequence[int]] = None,
                   tool: Any = None,
                   verify_plans: bool = False,
+                  batch_pricing: bool = False,
+                  guided: bool = False,
                   **kwargs: Any) -> ExplorationSession:
     """Build the :class:`ExplorationSession` for any registered
     workload x oracle pair.
@@ -402,15 +404,39 @@ def build_session(app: App | str, backend: Backend | str = "analytical",
     every memory plan the planner emits is independently re-proved
     race-free, capacity-feasible, and dominance-guarded by
     :mod:`repro.core.analysis.verify` before the session accepts it
-    (only meaningful together with ``share_plm``).  Remaining keywords
-    flow to :class:`ExplorationSession`.
+    (only meaningful together with ``share_plm``).
+
+    ``batch_pricing=True`` wraps an analytical tool in a
+    :class:`~repro.core.pricing.BatchPricer` so every oracle request is
+    a whole-grid lookup (bit-exact; non-analytical tools pass through
+    unchanged).  ``guided=True`` additionally runs surrogate-guided
+    characterization (:mod:`repro.core.surrogate`): the Algorithm-1
+    walk prices from the grid and only the surrogate's top corner per
+    component is confirmed through the real oracle — analytical
+    backends only; raises for backends without a grid program.
+    Remaining keywords flow to :class:`ExplorationSession`.
     """
+    from .pricing import BatchPricer     # lazy: pricing imports backends
     app = get_app(app) if isinstance(app, str) else app
     backend = get_backend(backend) if isinstance(backend, str) else backend
     if tool is None and kwargs.get("ledger") is None:
         # a pre-built ledger already wraps its own tool; building one
         # here would be dead weight (and, for measured backends, I/O)
         tool = backend.make_tool(app, share_plm=share_plm, tiles=tiles)
+    if guided:
+        target = tool if tool is not None else kwargs["ledger"].tool
+        pricer = BatchPricer.wrap(target)
+        if not isinstance(pricer, BatchPricer):
+            raise ValueError(
+                f"guided characterization needs an analytical pricing "
+                f"grid; backend {backend.name!r} tool "
+                f"{type(target).__name__} has none (batch_pricing/guided "
+                f"support HLSTool and XLATool)")
+        kwargs.setdefault("pricer", pricer)
+        if tool is not None:
+            tool = pricer               # share one grid set end to end
+    elif batch_pricing and tool is not None:
+        tool = BatchPricer.wrap(tool)
     if share_plm:
         if app.plm_planner is not None:
             kwargs.setdefault("memory_planner", app.plm_planner())

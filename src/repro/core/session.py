@@ -36,6 +36,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 from .characterize import CharacterizationResult, characterize_component
 from .knobs import CDFGFacts, KnobSpace, Region
 from .mapping import MapOutcome, map_target
+from .surrogate import RidgeSurrogate, guided_characterize_component
 from .obs import NULL_TRACER
 from .oracle import (OracleCache, OracleLedger, _synth_from_json,
                      _synth_to_json)
@@ -308,6 +309,8 @@ class ExplorationSession:
                  workers: int = 1,
                  memory_planner=None,
                  verify_plans: bool = False,
+                 pricer=None,
+                 surrogate=None,
                  tracer=None,
                  on_event: Optional[Callable[[ProgressEvent], None]] = None):
         self.tmg = tmg
@@ -317,6 +320,15 @@ class ExplorationSession:
         self.workers = max(1, int(workers))
         self.memory_planner = memory_planner
         self.verify_plans = bool(verify_plans)
+        # surrogate-guided characterization (core.surrogate): a
+        # BatchPricer turns the Algorithm-1 walk into grid lookups and
+        # the surrogate picks which corner to confirm through the real
+        # oracle; None keeps the unguided walk exactly as before
+        self.pricer = pricer
+        if surrogate is None and pricer is not None:
+            surrogate = RidgeSurrogate()
+        self.surrogate = surrogate
+        self.guided: Optional[Dict[str, Any]] = None  # per-component stats
         self.on_event = on_event
         if tracer is not None:
             self.tracer = tracer
@@ -385,14 +397,38 @@ class ExplorationSession:
 
             done = [0]
 
+            guided_stats: Dict[str, Any] = {}
+            if self.pricer is not None and self.surrogate is not None:
+                # phase-start fit from whatever the ledger already paid
+                # for (a restored or pre-warmed session): every
+                # component then ranks against the SAME surrogate state
+                # regardless of fan-out order, so the guided books are
+                # identical at any worker count
+                self.surrogate.fit(self.ledger.records)
+
             def one(name: str) -> CharacterizationResult:
                 # explicit parent: under a fan-out this runs on a pool
                 # thread, where the thread-local stack is empty
                 with self.tracer.span("session.component",
                                       parent=phase_sp,
                                       component=name) as sp:
-                    res = characterize_component(self.ledger, name,
-                                                 self.spaces[name])
+                    if self.pricer is not None:
+                        guided = guided_characterize_component(
+                            self.ledger, name, self.spaces[name],
+                            pricer=self.pricer, surrogate=self.surrogate,
+                            refit=False)
+                        res = guided.result
+                        with self._progress_lock:
+                            guided_stats[name] = {
+                                "confirmed": guided.confirmed,
+                                "fell_back": guided.fell_back,
+                                "grid_invocations": guided.grid_invocations,
+                            }
+                        sp.set("guided", True)
+                        sp.set("confirmed", guided.confirmed)
+                    else:
+                        res = characterize_component(self.ledger, name,
+                                                     self.spaces[name])
                     sp.set("regions", len(res.regions))
                     sp.set("invocations", res.invocations)
                 with self._progress_lock:
@@ -403,6 +439,14 @@ class ExplorationSession:
 
             results = self._pool_map(one, work)
             self.characterizations = dict(zip(work, results))
+            if self.pricer is not None:
+                self.guided = {n: guided_stats[n] for n in work}
+                if self.surrogate is not None:
+                    # phase-end refit from everything actually paid for
+                    # (confirmations included) — guides the next session
+                    # sharing this surrogate; fit() canonicalizes record
+                    # order, so the weights are fan-out independent too
+                    self.surrogate.fit(self.ledger.records)
         self._build_models()
         return self.characterizations
 

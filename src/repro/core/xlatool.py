@@ -63,6 +63,13 @@ class XLATool(OracleBatchMixin):
     def _microbatches(self, unrolls: int) -> int:
         return 1 << max(0, MAX_UNROLL - unrolls)
 
+    def mesh_for(self, ports: int) -> "tuple[int, Dict[str, int]]":
+        """``(chips, mesh_shape)`` for a fleet share — the knob-to-mesh
+        rule in one place, shared by ``synthesize`` and the whole-grid
+        pricer (:mod:`repro.core.pricing`)."""
+        chips = self._chips(ports)
+        return chips, {"data": max(1, chips // self.tp), "model": self.tp}
+
     def _lambda(self, cfg: ModelConfig, shape: ShapeSpec, chips: int,
                 mesh: Dict[str, int], microbatches: int, plan) -> float:
         """Roofline step time (s) for this stage at this fleet share."""
@@ -91,9 +98,8 @@ class XLATool(OracleBatchMixin):
     def synthesize(self, component: str, *, unrolls: int, ports: int,
                    max_states: Optional[int] = None) -> Synthesis:
         cfg, shape = self.components[component]
-        chips = self._chips(ports)
+        chips, mesh = self.mesh_for(ports)
         microbatches = self._microbatches(unrolls)
-        mesh = {"data": max(1, chips // self.tp), "model": self.tp}
         if shape.global_batch % mesh["data"] != 0 and \
                 mesh["data"] % shape.global_batch != 0:
             return Synthesis(lam=float("inf"), area=float("inf"),

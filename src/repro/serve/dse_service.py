@@ -49,6 +49,7 @@ from typing import Any, Deque, Dict, List, Optional, Tuple, Union
 
 from ..core.obs import NULL_TRACER, MetricsRegistry
 from ..core.oracle import OracleLedger, PersistentOracleCache, SharedOracle
+from ..core.pricing import BatchPricer
 from ..core.registry import build_query_session, build_tool, get_app, get_backend
 from ..core.session import CosmosResult, DSEQuery
 
@@ -301,6 +302,12 @@ class DSEService:
                 tool = build_tool(query.app, query.backend,
                                   share_plm=query.share_plm,
                                   tiles=query.tiles)
+                # pool-level whole-grid pricing: analytical tools answer
+                # every tenant's scalar request from one shared, memoized
+                # grid per (component, tile) — bit-exact, so coalescing
+                # and per-tenant attribution are unchanged; measured
+                # tools pass through wrap() untouched
+                tool = BatchPricer.wrap(tool)
                 pool = _Pool(slug=slug, cache=cache,
                              oracle=SharedOracle(tool, cache=cache,
                                                  name=slug,

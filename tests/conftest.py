@@ -14,7 +14,54 @@ normally.  ``pip install -e .[test]`` restores the real property tests.
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ----------------------------------------------------------------------
+# golden-artifact byte gates (fig10 / pricing / soc cells): one shared
+# capture + load pair instead of per-module copies
+# ----------------------------------------------------------------------
+class CaptureReport:
+    """Minimal stand-in for benchmarks.run's Report: keeps the lines
+    one cell writes so a test can byte-compare them."""
+
+    def __init__(self):
+        self.lines = None
+
+    def write(self, name, lines):
+        self.lines = list(lines)
+
+    def csv(self, *args, **kwargs):
+        pass
+
+
+@pytest.fixture
+def bench_cell_lines():
+    """Run one bench module's cell through a capture report and return
+    its output exactly as `benchmarks.run` would write it to disk."""
+
+    def _lines(mod, cell) -> str:
+        report = CaptureReport()
+        mod.run(report, cell)
+        assert report.lines is not None
+        return "\n".join(report.lines) + "\n"
+
+    return _lines
+
+
+@pytest.fixture
+def committed_artifact():
+    """Read a committed golden file under artifacts/bench/."""
+
+    def _read(*parts) -> str:
+        with open(os.path.join(REPO, "artifacts", "bench", *parts)) as f:
+            return f.read()
+
+    return _read
 
 try:
     import hypothesis  # noqa: F401

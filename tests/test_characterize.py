@@ -50,6 +50,24 @@ def test_more_ports_faster_regions():
     assert all(a > b for a, b in zip(lam_mins, lam_mins[1:]))
 
 
+def test_failed_is_a_per_run_delta_on_a_prewarmed_ledger():
+    """Regression: ``CharacterizationResult.failed`` must be the run's
+    own delta, like ``invocations`` — re-characterizing on a warm ledger
+    (restored cache, repeated exploration) used to report the ledger's
+    cumulative failure count against zero new invocations."""
+    tool = _tool(noise=2.0)
+    space = KnobSpace(clock_ns=1.0, max_ports=4, max_unrolls=24)
+    first = characterize_component(tool, "c", space)
+    assert first.failed > 0                   # the space has discards
+    assert first.failed == tool.failed.get("c", 0)
+    second = characterize_component(tool, "c", space)
+    # warm ledger: every request is a cache hit — nothing was invoked,
+    # so nothing newly failed
+    assert second.invocations == 0
+    assert second.failed == 0
+    assert repr(second.regions) == repr(first.regions)
+
+
 def test_lambda_constraint_discards_count_as_invocations():
     tool = _tool(noise=2.0)      # aggressive heuristic noise
     res = characterize_component(

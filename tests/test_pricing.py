@@ -1,0 +1,213 @@
+"""Differential battery: BatchPricer == scalar analytical path, bit-for-bit.
+
+The pricing grid's contract (src/repro/core/pricing.py) is exact
+equality, not approximation: every `Synthesis` a wrapped tool returns —
+lam, area, states, feasibility, tile, detail dict — must equal the
+scalar path's field-for-field, on the registered apps AND on randomized
+component spaces / tile axes / noise seeds (the hypothesis property).
+Ledger accounting must be equally invisible: a session run with
+``batch_pricing=True`` keeps byte-identical fronts and invocation
+counts under any worker count.
+"""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import BatchPricer
+from repro.core.hlsim import ComponentSpec, HLSTool, LoopNest
+from repro.core.obs import LogicalClock, Tracer
+from repro.core.registry import build_session, build_tool
+from repro.core.xlatool import XLATool
+
+
+def _pow2_ladder(top):
+    return [1 << k for k in range(top.bit_length()) if (1 << k) <= top]
+
+
+def _assert_same(pricer, tool, component, **kw):
+    got = pricer.synthesize(component, **kw)
+    want = tool.synthesize(component, **kw)
+    assert got == want, (component, kw, got, want)
+    return got
+
+
+# ----------------------------------------------------------------------
+# registered apps: wami (HLSTool) and fleet (XLATool), exhaustive planes
+# ----------------------------------------------------------------------
+def test_wami_hls_grid_bit_exact():
+    tool = build_tool("wami")
+    pricer = BatchPricer(tool)
+    for component in tool.components:
+        for ports in _pow2_ladder(8):
+            for unrolls in range(1, 13):
+                for cap in (None, 3, 7):
+                    _assert_same(pricer, tool, component, unrolls=unrolls,
+                                 ports=ports, max_states=cap)
+    assert pricer.fallbacks == 0
+    assert pricer.lookups > 0
+
+
+def test_wami_tile_axis_and_clock_bit_exact():
+    tool = build_tool("wami", share_plm=True)
+    pricer = BatchPricer(tool)
+    for component in list(tool.components)[:4]:
+        for tile in (0, 64, 128, 256):
+            for ports in (1, 4):
+                for unrolls in (1, 5, 8):
+                    for clock in (1.0, 0.75):
+                        _assert_same(pricer, tool, component,
+                                     unrolls=unrolls, ports=ports,
+                                     tile=tile, clock_ns=clock)
+    assert pricer.fallbacks == 0
+
+
+def test_fleet_xla_grid_bit_exact():
+    tool = build_tool("fleet")
+    assert isinstance(tool, XLATool)
+    pricer = BatchPricer(tool)
+    for component in tool.components:
+        for ports in range(1, 7):        # past max_ports=4: forces growth
+            for unrolls in range(1, 11):
+                for cap in (None, 5):    # XLATool ignores max_states
+                    _assert_same(pricer, tool, component, unrolls=unrolls,
+                                 ports=ports, max_states=cap)
+    assert pricer.fallbacks == 0
+
+
+def test_cdfg_facts_delegate_to_scalar_tool():
+    tool = build_tool("wami")
+    pricer = BatchPricer(tool)
+    name = next(iter(tool.components))
+    s = pricer.synthesize(name, unrolls=2, ports=2)
+    assert pricer.cdfg_facts(name, s) == tool.cdfg_facts(name, s)
+
+
+# ----------------------------------------------------------------------
+# fallback paths: out-of-grid requests answer via the scalar tool
+# ----------------------------------------------------------------------
+def test_non_pow2_ports_fall_back_to_scalar():
+    tool = build_tool("wami")
+    pricer = BatchPricer(tool)
+    name = next(iter(tool.components))
+    before = pricer.fallbacks
+    _assert_same(pricer, tool, name, unrolls=3, ports=3)
+    assert pricer.fallbacks == before + 1
+
+
+def test_xla_rejects_tile_knob_exactly_like_scalar():
+    tool = build_tool("fleet")
+    pricer = BatchPricer(tool)
+    name = next(iter(tool.components))
+    with pytest.raises(TypeError):
+        tool.synthesize(name, unrolls=1, ports=1, tile=64)
+    with pytest.raises(TypeError):
+        pricer.synthesize(name, unrolls=1, ports=1, tile=64)
+
+
+def test_unknown_component_raises_like_scalar():
+    tool = build_tool("wami")
+    pricer = BatchPricer(tool)
+    with pytest.raises(KeyError):
+        tool.synthesize("no-such", unrolls=1, ports=1)
+    with pytest.raises(KeyError):
+        pricer.synthesize("no-such", unrolls=1, ports=1)
+
+
+# ----------------------------------------------------------------------
+# wrap rules: grid only where the grid provably mirrors the tool
+# ----------------------------------------------------------------------
+def test_wrap_is_idempotent_and_selective():
+    tool = build_tool("wami")
+    pricer = BatchPricer.wrap(tool)
+    assert isinstance(pricer, BatchPricer) and pricer.tool is tool
+    assert BatchPricer.wrap(pricer) is pricer
+    other = object()
+    assert BatchPricer.wrap(other) is other
+
+
+def test_wrap_passes_overridden_synthesize_through():
+    """A subclass with its own synthesize (fault injection, gating,
+    counting wrappers) carries semantics the grid cannot reproduce —
+    wrap() must leave it scalar, and the constructor must refuse it."""
+
+    class Broken(HLSTool):
+        def synthesize(self, component, **kw):
+            raise RuntimeError("seeded failure")
+
+    spec = ComponentSpec("a", LoopNest(64, 2, 1, 8, 3, 6), 256, 256)
+    broken = Broken({"a": spec})
+    assert BatchPricer.wrap(broken) is broken
+    with pytest.raises(TypeError):
+        BatchPricer(broken)
+    with pytest.raises(TypeError):
+        BatchPricer(object())
+
+
+# ----------------------------------------------------------------------
+# observability: builds are memoized, grown by doubling, and traced
+# ----------------------------------------------------------------------
+def test_grid_builds_memoized_and_traced():
+    tool = build_tool("wami")
+    pricer = BatchPricer(tool)
+    tr = Tracer(clock=LogicalClock())
+    pricer.tracer = tr
+    name = next(iter(tool.components))
+    pricer.synthesize(name, unrolls=1, ports=1)
+    assert pricer.grid_builds == 1
+    first_points = pricer.grid_points_priced
+    pricer.synthesize(name, unrolls=8, ports=8)   # inside the min extent
+    assert pricer.grid_builds == 1
+    pricer.synthesize(name, unrolls=17, ports=8)  # forces doubled rebuild
+    assert pricer.grid_builds == 2
+    assert pricer.grid_points_priced > first_points
+    spans = tr.spans("pricing.batch")
+    assert len(spans) == 2
+    assert spans[0].attrs["component"] == name
+    assert spans[0].attrs["n"] > 0
+
+
+# ----------------------------------------------------------------------
+# ledger invisibility: sessions with batch_pricing keep identical books
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("workers", [1, 3])
+def test_session_ledger_counts_and_front_identical(workers):
+    plain = build_session("wami", workers=workers)
+    res_plain = plain.run()
+    batched = build_session("wami", workers=workers, batch_pricing=True)
+    res_batched = batched.run()
+    assert dict(plain.ledger.invocations) == dict(batched.ledger.invocations)
+    assert dict(plain.ledger.failed) == dict(batched.ledger.failed)
+    assert repr(res_plain.planned) == repr(res_batched.planned)
+    assert repr(res_plain.mapped) == repr(res_batched.mapped)
+
+
+# ----------------------------------------------------------------------
+# property: randomized spaces, tiles, noise seeds — still bit-exact
+# ----------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(trip=st.integers(1, 512), gamma_r=st.integers(0, 4),
+       gamma_w=st.integers(0, 3), arith=st.integers(1, 32),
+       dep=st.integers(1, 8), live=st.integers(1, 16),
+       has_plm=st.booleans(), words=st.integers(16, 2048),
+       noise=st.sampled_from([0.0, 1.0, 2.5]),
+       seed=st.sampled_from(["cosmos", "alt"]),
+       base_tile=st.sampled_from([0, 32]),
+       max_ports=st.sampled_from([2, 4, 8]),
+       max_unrolls=st.integers(2, 12))
+def test_property_random_hls_space_bit_exact(
+        trip, gamma_r, gamma_w, arith, dep, live, has_plm, words,
+        noise, seed, base_tile, max_ports, max_unrolls):
+    loop = LoopNest(trip, gamma_r, gamma_w, arith, dep, live, has_plm)
+    spec = ComponentSpec("rand", loop, words, max(1, words // 2),
+                         base_tile=base_tile)
+    tool = HLSTool({"rand": spec}, noise=noise, seed=seed)
+    pricer = BatchPricer(tool)
+    tiles = (0, 16, 48) if base_tile else (0,)
+    for tile in tiles:
+        for ports in _pow2_ladder(max_ports):
+            for unrolls in range(1, max_unrolls + 1):
+                for cap in (None, dep):
+                    _assert_same(pricer, tool, "rand", unrolls=unrolls,
+                                 ports=ports, max_states=cap, tile=tile)
+    assert pricer.fallbacks == 0

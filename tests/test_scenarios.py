@@ -229,48 +229,28 @@ def test_matrix_md_is_fresh():
 # ----------------------------------------------------------------------
 # (d) fig10 cells == the PR-4 flag-path outputs, byte for byte
 # ----------------------------------------------------------------------
-class _CaptureReport:
-    def __init__(self):
-        self.lines = None
-
-    def write(self, name, lines):
-        self.lines = list(lines)
-
-    def csv(self, *args, **kwargs):
-        pass
-
-
-def _cell_lines(mod, cell) -> str:
-    report = _CaptureReport()
-    mod.run(report, cell)
-    assert report.lines is not None
-    return "\n".join(report.lines) + "\n"
-
-
-def _committed_artifact(*parts) -> str:
-    with open(os.path.join(REPO, "artifacts", "bench", *parts)) as f:
-        return f.read()
-
-
-def test_fig10_share_plm_cell_matches_pr4_flag_path():
+def test_fig10_share_plm_cell_matches_pr4_flag_path(bench_cell_lines,
+                                                    committed_artifact):
     # fig10_pareto_pallas_share_plm.csv is the committed output of the
     # old `--share-plm` global-flag path (PR 3/4 era) — the variant
     # cell that replaced the flag must reproduce it byte for byte
     from benchmarks import fig10_pareto
-    got = _cell_lines(fig10_pareto,
-                      Cell("fig10", "wami", "pallas", "share_plm"))
-    assert got == _committed_artifact("fig10_pareto_pallas_share_plm.csv")
+    got = bench_cell_lines(fig10_pareto,
+                           Cell("fig10", "wami", "pallas", "share_plm"))
+    assert got == committed_artifact("fig10_pareto_pallas_share_plm.csv")
 
 
-def test_fig10_analytical_cell_matches_committed_reference():
+def test_fig10_analytical_cell_matches_committed_reference(
+        bench_cell_lines, committed_artifact):
     from benchmarks import fig10_pareto
-    got = _cell_lines(fig10_pareto, Cell("fig10", "wami", "analytical"))
-    assert got == _committed_artifact("fig10", "wami-analytical.csv")
+    got = bench_cell_lines(fig10_pareto, Cell("fig10", "wami", "analytical"))
+    assert got == committed_artifact("fig10", "wami-analytical.csv")
 
 
 @pytest.mark.slow
-def test_fig10_analytical_share_plm_cell_matches_pr4_flag_path():
+def test_fig10_analytical_share_plm_cell_matches_pr4_flag_path(
+        bench_cell_lines, committed_artifact):
     from benchmarks import fig10_pareto
-    got = _cell_lines(fig10_pareto,
-                      Cell("fig10", "wami", "analytical", "share_plm"))
-    assert got == _committed_artifact("fig10_pareto_share_plm.csv")
+    got = bench_cell_lines(fig10_pareto,
+                           Cell("fig10", "wami", "analytical", "share_plm"))
+    assert got == committed_artifact("fig10_pareto_share_plm.csv")

@@ -1,0 +1,166 @@
+"""Surrogate-guided frugality: byte-identical fronts, fewer invocations.
+
+The guarantee under test (src/repro/core/surrogate.py): a guided
+session emits exactly the front an unguided session emits — the grid
+walk plus one oracle confirmation per component replaces the real
+corner walk, and ANY grid/oracle disagreement falls back to the full
+unguided walk.  Frugality is the whole point, so the ledger spend must
+strictly drop, and on WAMI beat the paper's 14.6x headline (Fig. 11)
+against the exhaustive baseline.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.apps.wami import wami_exhaustive
+from repro.core import (BatchPricer, KnobSpace, OracleLedger,
+                        RidgeSurrogate, characterize_component,
+                        guided_characterize_component)
+from repro.core.hlsim import ComponentSpec, HLSTool, LoopNest
+from repro.core.registry import build_session, list_apps
+
+
+def _run(app, **kw):
+    s = build_session(app, **kw)
+    return s, s.run()
+
+
+def _front(res):
+    return repr(res.planned), repr(res.mapped)
+
+
+def _spend(session):
+    return sum(session.ledger.invocations.values())
+
+
+# every registered app gets a guided analytical cell, plus the
+# memory-co-design cell (tile axis) for wami
+_CELLS = [(a.name, {}) for a in list_apps()] + [("wami", {"share_plm": True})]
+
+
+@pytest.mark.parametrize("app,opts", _CELLS,
+                         ids=[f"{a}{'-share_plm' if o else ''}"
+                              for a, o in _CELLS])
+def test_guided_front_byte_identical_and_strictly_cheaper(app, opts):
+    plain_s, plain = _run(app, **opts)
+    guided_s, guided = _run(app, guided=True, **opts)
+    assert _front(guided) == _front(plain)
+    assert _spend(guided_s) < _spend(plain_s)
+    stats = guided_s.guided
+    assert stats and set(stats) == set(plain_s.characterizations)
+    assert not any(v["fell_back"] for v in stats.values())
+    # per-component books stay per-run deltas in the guided path too
+    for name, char in guided_s.characterizations.items():
+        assert char.invocations <= plain_s.characterizations[name].invocations
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+def test_guided_is_deterministic_across_worker_counts(workers):
+    base_s, base = _run("wami", guided=True)
+    par_s, par = _run("wami", guided=True, workers=workers)
+    assert _front(par) == _front(base)
+    assert dict(par_s.ledger.invocations) == dict(base_s.ledger.invocations)
+
+
+@pytest.mark.slow
+def test_wami_guided_beats_the_paper_frugality_headline():
+    """Fig. 11 acceptance: exhaustive WAMI spend over the guided
+    session's whole-ledger spend (characterize + map confirmations)
+    must beat the paper's best per-component ratio, 14.6x."""
+    exhaustive = wami_exhaustive()
+    guided_s, _ = _run("wami", guided=True)
+    ratio = exhaustive.total_invocations / _spend(guided_s)
+    assert ratio >= 14.6
+
+
+# ----------------------------------------------------------------------
+# poisoning: neither a bad ranker nor a bad grid may change the front
+# ----------------------------------------------------------------------
+class _PoisonedSurrogate(RidgeSurrogate):
+    """Always 'fitted', adversarially inverted ranking."""
+
+    @property
+    def fitted(self):
+        return True
+
+    def predict(self, component, unrolls, ports, tile):
+        return -float(unrolls * 31 + ports * 7 + tile)
+
+
+def test_poisoned_surrogate_cannot_change_the_front():
+    plain_s, plain = _run("wami")
+    guided_s, guided = _run("wami", guided=True,
+                            surrogate=_PoisonedSurrogate())
+    assert _front(guided) == _front(plain)
+    assert _spend(guided_s) < _spend(plain_s)
+
+
+def _toy_tool():
+    return HLSTool({
+        "a": ComponentSpec("a", LoopNest(256, 2, 1, 8, 3, 6), 1024, 1024),
+    })
+
+
+class _PoisonedPricer:
+    """Grid facade whose feasible latencies are subtly wrong — the
+    oracle confirmation must catch the disagreement."""
+
+    def __init__(self, pricer):
+        self._p = pricer
+
+    def synthesize(self, component, **kw):
+        s = self._p.synthesize(component, **kw)
+        if s.feasible:
+            return dataclasses.replace(s, lam=s.lam * (1.0 + 1e-6))
+        return s
+
+    def cdfg_facts(self, component, synth):
+        return self._p.cdfg_facts(component, synth)
+
+
+def test_poisoned_grid_is_caught_and_falls_back_to_exact_front():
+    space = KnobSpace(clock_ns=1.0, max_ports=4, max_unrolls=8)
+    ref = characterize_component(OracleLedger(_toy_tool()), "a", space)
+
+    tool = _toy_tool()
+    gc = guided_characterize_component(
+        OracleLedger(tool), "a", space,
+        pricer=_PoisonedPricer(BatchPricer(tool)))
+    assert gc.fell_back and gc.confirmed == 1
+    assert repr(gc.result.regions) == repr(ref.regions)
+    assert repr(gc.result.points) == repr(ref.points)
+    # the wasted confirmation is the unguided walk's own corner request,
+    # so the fallback re-walk serves it from cache: same total spend
+    assert gc.result.invocations == ref.invocations
+
+
+def test_healthy_grid_confirms_one_invocation_per_component():
+    space = KnobSpace(clock_ns=1.0, max_ports=4, max_unrolls=8)
+    ref = characterize_component(OracleLedger(_toy_tool()), "a", space)
+
+    tool = _toy_tool()
+    gc = guided_characterize_component(
+        OracleLedger(tool), "a", space, pricer=BatchPricer(tool))
+    assert not gc.fell_back and gc.confirmed == 1
+    assert repr(gc.result.regions) == repr(ref.regions)
+    assert repr(gc.result.points) == repr(ref.points)
+    assert gc.result.invocations == 1           # one confirmation paid
+    assert gc.grid_invocations == ref.invocations   # walk absorbed by grid
+
+
+def test_surrogate_fits_online_and_ranks():
+    tool = _toy_tool()
+    ledger = OracleLedger(tool)
+    space = KnobSpace(clock_ns=1.0, max_ports=16, max_unrolls=32)
+    characterize_component(ledger, "a", space)   # generate records
+    sur = RidgeSurrogate()
+    assert not sur.fitted
+    with pytest.raises(RuntimeError):
+        sur.predict("a", 1, 1, 0)
+    assert sur.fit(ledger.records)
+    assert sur.fitted
+    # more parallelism must not predict slower on this monotone toy
+    fast = sur.predict("a", 8, 4, 0)
+    slow = sur.predict("a", 1, 1, 0)
+    assert fast <= slow
